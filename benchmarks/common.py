@@ -1,0 +1,63 @@
+"""Shared benchmark helpers: model setup, outlier injection, eval metric.
+
+The HumanEval-pass@1 of the paper is not computable offline; its offline
+analog here is (i) the whole-model weighted quantization loss — the paper's
+own search objective, Table 4 reports it alongside pass@1 — and (ii) the
+relative logit error / argmax agreement of the quantized model vs FP on a
+held-out synthetic eval set.  Models get INJECTED activation-outlier
+channels so the >6.7B outlier regime (the paper's entire premise) is present
+at smoke scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import QuantConfig
+from repro.core import calibration as C
+from repro.models import api
+
+GROUP = 16  # smoke-scale quant group (prod: 128)
+
+
+def outlier_model(arch: str, seed: int = 0, hot_scale: float = 100.0):
+    cfg = get_config(arch, smoke=True).with_(dtype="float32")
+    params = api.init_model(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    hot = np.ones(cfg.d_model, np.float32)
+    hot[rng.choice(cfg.d_model, size=max(2, cfg.d_model // 32), replace=False)] = hot_scale
+    if "embed" in params:
+        params["embed"]["table"] = params["embed"]["table"] * hot[None, :]
+    else:  # whisper
+        params["dec"]["embed"]["table"] = params["dec"]["embed"]["table"] * hot[None, :]
+    return cfg, params
+
+
+def eval_batches(cfg, n=3, seq=32, seed=99):
+    return C.synthetic_calibration_set(cfg, n_seqs=n, seq_len=seq,
+                                       domain="humaneval", seed=seed)
+
+
+def rel_err_and_agreement(cfg, params_fp, params_q, batches) -> Tuple[float, float]:
+    rels, ags = [], []
+    for b in batches:
+        ref = np.asarray(api.forward_fn(params_fp, b, cfg, backend="xla"), np.float32)
+        got = np.asarray(api.forward_fn(params_q, b, cfg, backend="xla"), np.float32)
+        rels.append(np.linalg.norm(got - ref) / max(np.linalg.norm(ref), 1e-9))
+        ags.append(float((got.argmax(-1) == ref.argmax(-1)).mean()))
+    return float(np.mean(rels)), float(np.mean(ags))
+
+
+def timed(fn, *args, reps=3) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out  # us

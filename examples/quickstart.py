@@ -1,0 +1,49 @@
+"""Quickstart: SmoothQuant+ 4-bit PTQ of a small Code Llama-style model.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. init an FP model, 2. calibrate + search alpha + smooth + int4-quantize,
+3. compare quantized vs FP outputs, 4. generate a few tokens W4A16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import QuantConfig
+from repro.core.apply import smoothquant_plus
+from repro.core.calibration import synthetic_calibration_set
+from repro.models import api
+
+cfg = get_config("codellama-7b", smoke=True).with_(dtype="float32")
+params = api.init_model(jax.random.PRNGKey(0), cfg)
+print(f"model: {cfg.name}  params: "
+      f"{sum(x.size for x in jax.tree.leaves(params)):,}")
+
+calib = synthetic_calibration_set(cfg, n_seqs=4, seq_len=32)
+qparams, report = smoothquant_plus(
+    params, cfg, calib, QuantConfig(group_size=16), step=0.25, verbose=True)
+print(f"searched alpha={report.alpha:.2f}  whole-model loss={report.search_loss:.5f}")
+print(f"linear weights: {report.fp_bytes/1e6:.2f} MB fp16-equiv -> "
+      f"{report.quant_bytes/1e6:.2f} MB int4 "
+      f"({report.quant_bytes/report.fp_bytes:.0%})")
+
+batch = calib[0]
+fp = api.forward_fn(params, batch, cfg, backend="xla")
+w4 = api.forward_fn(qparams, batch, cfg, backend="xla")
+rel = float(jnp.linalg.norm(w4 - fp) / jnp.linalg.norm(fp))
+print(f"relative logit error after PTQ: {rel:.4f}")
+
+# greedy generation with the quantized model
+prompt = jnp.asarray([[5, 17, 300, 42]], jnp.int32)
+logits, cache = api.prefill_fn(qparams, {"tokens": prompt}, cfg, 32, backend="xla")
+toks = [int(jnp.argmax(logits, -1)[0])]
+pos = prompt.shape[1]
+for _ in range(8):
+    logits, cache = api.decode_fn(
+        qparams, {"token": jnp.asarray([[toks[-1]]], jnp.int32),
+                  "position": jnp.asarray([pos], jnp.int32)},
+        cache, cfg, backend="xla")
+    toks.append(int(jnp.argmax(logits, -1)[0]))
+    pos += 1
+print("generated (W4A16):", toks)

@@ -1,0 +1,27 @@
+"""Train a small LM for a few hundred steps on the synthetic pipeline, with
+checkpoint/restore round trip (fault-tolerance demo).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+losses = train_main([
+    "--arch", "codellama-7b", "--smoke", "--steps", str(args.steps),
+    "--batch", "8", "--seq", "64", "--lr", "3e-3",
+    "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "100",
+])
+assert losses[-1] < losses[0], "loss did not improve"
+print("resuming from checkpoint for 10 more steps (restart demo)...")
+train_main([
+    "--arch", "codellama-7b", "--smoke", "--steps", str(args.steps + 10),
+    "--batch", "8", "--seq", "64", "--lr", "3e-3",
+    "--ckpt-dir", "/tmp/repro_ckpt",
+])
+print("OK")

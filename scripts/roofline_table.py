@@ -1,0 +1,44 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from results/dryrun_opt/*.json."""
+import json, glob, sys
+from pathlib import Path
+
+rows = []
+for f in sorted(glob.glob("results/dryrun_opt/*.json")):
+    d = json.loads(Path(f).read_text())
+    if d.get("tag"):
+        continue
+    rows.append(d)
+
+def fmt(v, n=3):
+    return f"{v:.{n}g}" if isinstance(v, (int, float)) else str(v)
+
+def table(mesh):
+    out = ["| arch | shape | step | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck | useful/HLO | roofline frac | bytes/dev (args+tmp) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d["mesh"] != mesh:
+            continue
+        if d.get("skipped"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | SKIP | — | — | {d.get('reason','')[:40]} |")
+            continue
+        if not d.get("ok"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | FAIL | — | — | {d.get('error','')[:40]} |")
+            continue
+        r = d["roofline"]; m = d.get("memory", {})
+        bpd = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 2**30
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['step']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | {r['bottleneck']} | "
+            f"{fmt(r['useful_flops_ratio'])} | {fmt(r['roofline_fraction'])} | {bpd:.2f} GiB |")
+    return "\n".join(out)
+
+print("### Single-pod mesh (16×16 = 256 chips)\n")
+print(table("single"))
+print("\n### Multi-pod mesh (2×16×16 = 512 chips)\n")
+print(table("multi"))
+
+# summary stats
+ok = [d for d in rows if d.get("ok") and not d.get("skipped")]
+fails = [d for d in rows if not d.get("ok")]
+skips = [d for d in rows if d.get("skipped")]
+print(f"\ncells: {len(ok)} compiled OK, {len(skips)} skipped per assignment, {len(fails)} failed")

@@ -1,0 +1,40 @@
+"""Config registry: assigned architectures ↔ modules.
+
+Each module exports ``CONFIG`` (exact full-size, dry-run only) and
+``SMOKE_CONFIG`` (same family, tiny, CPU-runnable).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    HybridConfig, MLAConfig, ModelConfig, MoEConfig, QuantConfig, ShapeConfig,
+    SHAPES, SHAPES_BY_NAME, TrainConfig,
+)
+
+ARCH_IDS = (
+    "mistral-large-123b",
+    "chatglm3-6b",
+    "llama3.2-3b",
+    "starcoder2-15b",
+    "zamba2-7b",
+    "qwen2-vl-7b",
+    "granite-moe-1b-a400m",
+    "deepseek-v2-236b",
+    "rwkv6-7b",
+    "whisper-medium",
+    # paper's own evaluation family
+    "codellama-7b",
+    "codellama-13b",
+    "codellama-34b",
+)
+
+def _modname(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG

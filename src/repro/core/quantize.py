@@ -1,0 +1,198 @@
+"""Group-wise 4-bit asymmetric RTN quantization (SmoothQuant+ §2.1, eq. 1).
+
+Conventions
+-----------
+A linear layer weight is ``W[Ci, Co]`` (input channels × output channels), so
+``Y = X @ W``.  Quantization groups are *along the input-channel (contraction)
+axis*: group ``g`` covers rows ``[g*G, (g+1)*G)`` and has one ``scale``/``zero``
+per output channel, i.e. ``scales[Ci//G, Co]``.
+
+Packed storage: two int4 codes per uint8, packed along the input-channel axis
+in a *group-split* layout chosen for the TPU kernel: within each quantization
+group of ``G`` rows, packed row ``r`` (``r < G//2``) holds code
+``q[g*G + r, o]`` in the low nibble and ``q[g*G + G//2 + r, o]`` in the high
+nibble.  Unpacking a group is then ``concat([lo, hi], axis=0)`` — a sublane
+concatenation, with no row interleave — which lowers cleanly on TPU and keeps
+each group contiguous in VMEM next to its ``scales``/``zeros`` row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NBITS = 4
+QMAX = (1 << NBITS) - 1  # 15
+DEFAULT_GROUP_SIZE = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A group-wise int4-quantized 2-D weight, packed 2 codes / uint8.
+
+    Attributes:
+      packed: uint8[Ci//2, Co] — packed int4 codes (low nibble = even row).
+      scales: dtype[Ci//G, Co] — per-group, per-out-channel step size Δ.
+      zeros:  dtype[Ci//G, Co] — per-group, per-out-channel zero point
+              (stored in the *float* domain as ``zero_code`` so dequant is
+              ``(q - zeros) * scales``).
+    """
+
+    packed: jax.Array
+    scales: jax.Array
+    zeros: jax.Array
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (*self.packed.shape[:-2], self.packed.shape[-2] * 2, self.packed.shape[-1])
+
+    @property
+    def group_size(self) -> int:
+        return (self.packed.shape[-2] * 2) // self.scales.shape[-2]
+
+    @property
+    def dtype(self):
+        return self.scales.dtype
+
+    def nbytes_quant(self) -> int:
+        return (
+            self.packed.size * self.packed.dtype.itemsize
+            + self.scales.size * self.scales.dtype.itemsize
+            + self.zeros.size * self.zeros.dtype.itemsize
+        )
+
+
+def _check_nd(w: jax.Array) -> None:
+    if w.ndim < 2:
+        raise ValueError(f"expected >=2-D weight, got shape {w.shape}")
+
+
+def compute_qparams(
+    w: jax.Array, group_size: int = DEFAULT_GROUP_SIZE
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-(group, out-channel) asymmetric min/max qparams (eq. 1).
+
+    Returns (scales, zeros), each ``[Ci//G, Co]`` in ``w.dtype``'s compute
+    precision (f32 internally, cast back).
+    """
+    _check_nd(w)
+    *lead, ci, co = w.shape
+    if ci % group_size != 0:
+        raise ValueError(f"Ci={ci} not divisible by group_size={group_size}")
+    g = ci // group_size
+    wf = w.astype(jnp.float32).reshape(*lead, g, group_size, co)
+    wmax = jnp.max(wf, axis=-2)
+    wmin = jnp.min(wf, axis=-2)
+    scales = (wmax - wmin) / QMAX
+    # Avoid 0 step for constant groups.
+    scales = jnp.where(scales <= 0, jnp.ones_like(scales), scales)
+    # Eq. 1 clamps the *codes* to [0, 2^N-1]; Z itself is unclamped (we store
+    # it in float alongside the scales, so offset-only groups stay exact).
+    zeros = jnp.round(-wmin / scales)
+    return scales, zeros
+
+
+def quantize_codes(
+    w: jax.Array,
+    scales: jax.Array,
+    zeros: jax.Array,
+    group_size: int = DEFAULT_GROUP_SIZE,
+) -> jax.Array:
+    """RTN: map ``w`` to int codes in [0, 15].  Returns uint8[..., Ci, Co] (unpacked)."""
+    *lead, ci, co = w.shape
+    g = ci // group_size
+    wf = w.astype(jnp.float32).reshape(*lead, g, group_size, co)
+    q = jnp.round(wf / scales[..., None, :]) + zeros[..., None, :]
+    q = jnp.clip(q, 0, QMAX).astype(jnp.uint8)
+    return q.reshape(*lead, ci, co)
+
+
+def pack_codes(q: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> jax.Array:
+    """Pack uint8 codes (0..15) into uint8[..., Ci//2, Co], group-split layout."""
+    *lead, ci, co = q.shape
+    if ci % group_size != 0 or group_size % 2 != 0:
+        raise ValueError(f"Ci={ci} / group_size={group_size} incompatible")
+    h = group_size // 2
+    qg = q.reshape(*lead, ci // group_size, 2, h, co)
+    return (qg[..., 0, :, :] | (qg[..., 1, :, :] << 4)).astype(jnp.uint8).reshape(
+        *lead, ci // 2, co
+    )
+
+
+def unpack_codes(packed: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> jax.Array:
+    """Inverse of :func:`pack_codes` → uint8[..., Ci, Co]."""
+    *lead, ci2, co = packed.shape
+    h = group_size // 2
+    pg = packed.reshape(*lead, ci2 // h, h, co)
+    lo = pg & 0x0F
+    hi = (pg >> 4) & 0x0F
+    return jnp.concatenate([lo, hi], axis=-2).reshape(*lead, ci2 * 2, co)
+
+
+def quantize(
+    w: jax.Array,
+    group_size: int = DEFAULT_GROUP_SIZE,
+    dtype: jnp.dtype | None = None,
+) -> QuantizedTensor:
+    """Group-wise asymmetric 4-bit RTN quantization of ``W[Ci, Co]``."""
+    _check_nd(w)
+    dtype = dtype or w.dtype
+    scales, zeros = compute_qparams(w, group_size)
+    q = quantize_codes(w, scales, zeros, group_size)
+    return QuantizedTensor(
+        packed=pack_codes(q, group_size),
+        scales=scales.astype(dtype),
+        zeros=zeros.astype(dtype),
+    )
+
+
+def dequantize(qt: QuantizedTensor, dtype: jnp.dtype | None = None) -> jax.Array:
+    """Ŵ = (q − zero) · Δ, back to ``[..., Ci, Co]``."""
+    dtype = dtype or qt.dtype
+    q = unpack_codes(qt.packed, qt.group_size).astype(jnp.float32)
+    *lead, ci, co = q.shape
+    g = qt.scales.shape[-2]
+    qg = q.reshape(*lead, g, ci // g, co)
+    w = (qg - qt.zeros[..., None, :].astype(jnp.float32)) * qt.scales[
+        ..., None, :
+    ].astype(jnp.float32)
+    return w.reshape(*lead, ci, co).astype(dtype)
+
+
+def fake_quantize(
+    w: jax.Array, group_size: int = DEFAULT_GROUP_SIZE
+) -> jax.Array:
+    """quantize→dequantize round trip in one shot (used by the α search)."""
+    _check_nd(w)
+    *lead, ci, co = w.shape
+    if ci % group_size != 0 or ci < group_size:
+        raise ValueError(f"Ci={ci} incompatible with group_size={group_size}")
+    g = ci // group_size
+    wf = w.astype(jnp.float32).reshape(*lead, g, group_size, co)
+    wmax = jnp.max(wf, axis=-2, keepdims=True)
+    wmin = jnp.min(wf, axis=-2, keepdims=True)
+    scales = (wmax - wmin) / QMAX
+    scales = jnp.where(scales <= 0, jnp.ones_like(scales), scales)
+    zeros = jnp.round(-wmin / scales)
+    q = jnp.clip(jnp.round(wf / scales) + zeros, 0, QMAX)
+    return ((q - zeros) * scales).reshape(*lead, ci, co).astype(w.dtype)
+
+
+def quantization_loss(
+    w: jax.Array,
+    x_stat: jax.Array,
+    group_size: int = DEFAULT_GROUP_SIZE,
+) -> jax.Array:
+    """Activation-weighted quantization loss  E ≈ ||diag(x)·(W − Ŵ)||²  (eq. 4).
+
+    ``x_stat[Ci]`` is a per-input-channel activation magnitude statistic
+    (channel max over the calibration set); using it instead of the full X
+    matrix makes the whole-model loss evaluation O(params) per α instead of
+    O(calibration tokens × params), while preserving the outlier-amplification
+    structure the paper exploits.
+    """
+    err = (w - fake_quantize(w, group_size)).astype(jnp.float32)
+    return jnp.sum((err * x_stat.astype(jnp.float32)[..., :, None]) ** 2)

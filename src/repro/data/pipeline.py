@@ -1,0 +1,70 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Every batch is a pure function of (seed, step) via counter-based PRNG —
+restart/resume = set the step counter (no iterator state to snapshot), and
+elastic re-sharding is trivial because the GLOBAL batch is deterministic and
+each host slices its own shard.  This is the standard fault-tolerant data
+design (tf.data-with-checkpoints replaced by a stateless map).
+
+The token stream is a Zipf-distributed language-like mixture with injected
+long-range copy structure (so a ~100M-param model trained on it shows a
+clearly decreasing loss — used by examples/train_small.py)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+    zipf_a: float = 1.2
+    copy_period: int = 64          # long-range structure for learnability
+
+
+class SyntheticTokens:
+    """Stateless batch source: ``batch_at(step)`` for any step, any time."""
+
+    def __init__(self, dc: DataConfig, cfg: Optional[ModelConfig] = None):
+        self.dc = dc
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        dc = self.dc
+        rng = np.random.default_rng((dc.seed << 32) ^ step)
+        ranks = rng.zipf(dc.zipf_a, size=(dc.global_batch, dc.seq_len + 1))
+        toks = (ranks % (dc.vocab_size - 2) + 2).astype(np.int32)
+        # inject copy structure: every copy_period-th token repeats the token
+        # copy_period//2 positions earlier — learnable signal
+        p = dc.copy_period
+        idx = np.arange(dc.seq_len + 1)
+        src = idx - p // 2
+        mask = (idx % p == 0) & (src >= 0)
+        toks[:, mask] = toks[:, src[mask]]
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        if self.cfg is not None and self.cfg.encdec:
+            frng = np.random.default_rng((dc.seed << 32) ^ step ^ 0xF00D)
+            batch["frames"] = jnp.asarray(
+                frng.standard_normal(
+                    (dc.global_batch, dc.seq_len, self.cfg.d_model), np.float32
+                )
+            ).astype(self.cfg.jdtype)
+        return batch
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, jax.Array]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1

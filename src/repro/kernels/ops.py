@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for kernels, with backend dispatch.
+
+``backend``:
+  - ``"pallas"``:    compiled Pallas TPU kernel (real TPU only).
+  - ``"interpret"``: Pallas kernel body interpreted on CPU (tests).
+  - ``"xla"``:       dequantize-then-matmul; XLA fuses the dequant into the
+                     GEMM's producer.  Used for the CPU dry-run so lowering
+                     succeeds on the host platform.
+  - ``"auto"``:      pallas on TPU devices, xla otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor
+from repro.kernels import ref as _ref
+from repro.kernels import w4a16_matmul as _w4
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def w4a16_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    backend: str = "auto",
+    block_t: int = _w4.DEFAULT_BLOCK_T,
+    block_co: int = _w4.DEFAULT_BLOCK_CO,
+) -> jax.Array:
+    """Quantized linear contraction ``x @ dequant(qt)``."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend == "pallas":
+        return _w4.w4a16_matmul(x, qt, block_t=block_t, block_co=block_co)
+    if backend == "interpret":
+        return _w4.w4a16_matmul(
+            x, qt, block_t=block_t, block_co=block_co, interpret=True
+        )
+    if backend == "xla":
+        return _ref.w4a16_matmul_ref(x, qt)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def quantized_linear(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    bias: jax.Array | None = None,
+    *,
+    backend: str = "auto",
+) -> jax.Array:
+    y = w4a16_matmul(x, qt, backend=backend)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the kernels package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor, dequantize
+
+
+def w4a16_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Oracle: dequantize the whole weight, then a plain matmul.
+
+    x: [..., Ci] activation (bf16/f32); qt: packed int4 weight [Ci, Co].
+    Returns [..., Co] in x.dtype, accumulated in f32.
+    """
+    w = dequantize(qt, jnp.float32)
+    y = jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+    return y.astype(x.dtype)

@@ -1,0 +1,133 @@
+"""W4A16 group-wise dequant-inside-matmul Pallas TPU kernel.
+
+TPU adaptation of the paper's LMDeploy-derived CUDA W4A16 GEMM (§2.3): int4
+weights stay packed in HBM; each grid step DMAs one packed block into VMEM,
+expands to bf16 *in VMEM*, and feeds the MXU.  HBM traffic for weights is ~¼
+of bf16, which is the roofline win for memory-bound decode GEMMs.
+
+Layout contract (see ``repro.core.quantize``): packing is along the
+contraction axis in group-split layout, so with ``block_ci == group_size`` a
+weight block unpacks with a single sublane ``concat`` — no row interleave —
+and uses exactly one ``scales``/``zeros`` row.
+
+Grid: ``(T/bt, Co/bco, Ci/bci)`` with the contraction axis innermost; partial
+products accumulate in an f32 VMEM scratch and are written back once per
+``(i, j)`` tile on the last ``k`` step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import QuantizedTensor
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_CO = 256
+
+
+def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = packed_ref[...]  # (bci//2, bco) uint8
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    codes = jnp.concatenate([lo, hi], axis=0)  # (bci, bco) group-split order
+    scale = scales_ref[...]  # (1, bco)
+    zero = zeros_ref[...]  # (1, bco)
+    w = (codes.astype(jnp.float32) - zero.astype(jnp.float32)) * scale.astype(
+        jnp.float32
+    )
+    x = x_ref[...].astype(jnp.float32)  # (bt, bci)
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_co", "interpret")
+)
+def w4a16_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_co: int = DEFAULT_BLOCK_CO,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x[..., Ci] @ dequant(qt)[Ci, Co] -> [..., Co]`` via Pallas.
+
+    The contraction block is pinned to the quantization group size so each
+    grid step sees whole groups (one scales/zeros row per step).
+    """
+    if qt.packed.ndim != 2:
+        raise ValueError("pallas kernel handles 2-D weights; got leading dims")
+    orig_shape = x.shape
+    ci = orig_shape[-1]
+    co = qt.packed.shape[1]
+    group = qt.group_size
+    if ci != qt.shape[0]:
+        raise ValueError(f"x Ci={ci} != weight Ci={qt.shape[0]}")
+
+    x2 = x.reshape(-1, ci)
+    t = x2.shape[0]
+    bt = min(block_t, _round_up(t, 8))
+    bco = min(block_co, co)
+    bci = group  # one quant group per contraction step
+
+    t_pad = _round_up(t, bt)
+    if t_pad != t:
+        x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
+    if co % bco != 0:
+        raise ValueError(f"Co={co} not divisible by block_co={bco}")
+    n_t, n_co, n_k = t_pad // bt, co // bco, ci // bci
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(n_t, n_co, n_k),
+        in_specs=[
+            pl.BlockSpec((bt, bci), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bci // 2, bco), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bco), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, co), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bco), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x2, qt.packed, qt.scales, qt.zeros)
+
+    if t_pad != t:
+        out = out[:t]
+    return out.reshape(*orig_shape[:-1], co)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def vmem_bytes(block_t: int, block_co: int, group: int, dtype_bytes: int = 2) -> int:
+    """Analytic VMEM working-set claim for one grid step (for roofline notes)."""
+    x_blk = block_t * group * dtype_bytes
+    w_blk = (group // 2) * block_co  # uint8
+    sz = 2 * block_co * dtype_bytes  # scales+zeros rows
+    acc = block_t * block_co * 4
+    out = block_t * block_co * dtype_bytes
+    return x_blk + w_blk + sz + acc + out

@@ -1,0 +1,269 @@
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers, GSPMD-
+partitions, and compiles — and extract its roofline terms — without touching
+real hardware.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON per cell; reruns skip completed cells.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count on first init, so this MUST precede every other import.
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import QuantConfig, SHAPES, SHAPES_BY_NAME, TrainConfig
+from repro.core.apply import quantize_params
+from repro.launch import hlo_analysis as HA
+from repro.launch import jaxpr_cost as JC
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import adamw
+from repro.sharding import hints
+from repro.sharding import rules
+from repro.train.trainer import make_train_step
+
+ASSIGNED = ARCH_IDS[:10]  # the 10 assigned archs (codellama-* are extras)
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree,
+        is_leaf=lambda l: isinstance(l, jax.ShapeDtypeStruct),
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, quantized: bool = True,
+               train_cfg: TrainConfig | None = None, kv_quant: bool = False):
+    """Returns (fn, example_args_shapes, in_shardings, out_shardings, meta)."""
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = cfg.with_(kv_quant=True)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = api.supports_shape(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    # microbatch so per-device live activations fit HBM: one sample per data
+    # row per microstep (global/16 grad-accum steps)
+    tc = train_cfg or TrainConfig(
+        remat="block", microbatch=max(1, shape.global_batch // 16)
+    )
+    tc_micro = tc.microbatch
+    backend = "xla"  # CPU-lowerable quantized matmul; pallas on real TPU
+
+    def named(spec_tree):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), spec_tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+
+    params_shape = jax.eval_shape(lambda: api.init_model(jax.random.PRNGKey(0), cfg))
+    batch_shape = api.input_specs(cfg, shape)
+    bspecs = rules.batch_specs(batch_shape, mesh)
+
+    if shape.kind == "train":
+        pspecs = rules.param_specs(params_shape, mesh, cfg)
+        opt_shape = jax.eval_shape(lambda p: adamw.init_opt_state(p, tc), params_shape)
+        ospecs = rules.opt_specs(opt_shape, pspecs, mesh)
+        step = make_train_step(cfg, tc, backend=backend)
+        fn = jax.jit(
+            step,
+            in_shardings=named((pspecs, ospecs, bspecs)),
+            out_shardings=named((pspecs, ospecs)) + (None,),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shape, opt_shape, batch_shape)
+        raw_fn = step
+        meta = {"step": "train_step"}
+    else:
+        if quantized:
+            qshape = jax.eval_shape(
+                lambda p: quantize_params(p, cfg, QuantConfig())[0], params_shape
+            )
+        else:
+            qshape = params_shape
+        pspecs = rules.param_specs(qshape, mesh, cfg)
+        if shape.kind == "prefill":
+            smax = shape.seq_len
+
+            def prefill(params, batch):
+                return api.prefill_fn(params, batch, cfg, smax, backend=backend)
+
+            cache_shape = jax.eval_shape(
+                lambda p, b: prefill(p, b), qshape, batch_shape
+            )[1]
+            cspecs = rules.cache_specs_tree(cache_shape, mesh)
+            fn = jax.jit(
+                prefill,
+                in_shardings=named((pspecs, bspecs)),
+                out_shardings=named((rules.logits_prefill_spec(
+                    mesh, shape.global_batch, cfg.vocab_size), cspecs)),
+            )
+            args = (qshape, batch_shape)
+            raw_fn = prefill
+            meta = {"step": "prefill_step"}
+        else:  # decode
+            cache_shape = api.cache_specs(cfg, shape)
+            cspecs = rules.cache_specs_tree(cache_shape, mesh)
+
+            def serve(params, cache, batch):
+                logits, new_cache = api.decode_fn(params, batch, cache, cfg,
+                                                  backend=backend)
+                return logits, new_cache
+
+            fn = jax.jit(
+                serve,
+                in_shardings=named((pspecs, cspecs, bspecs)),
+                out_shardings=named((rules.logits_decode_spec(
+                    mesh, shape.global_batch, cfg.vocab_size), cspecs)),
+                donate_argnums=(1,),
+            )
+            args = (qshape, cache_shape, batch_shape)
+            raw_fn = serve
+            meta = {"step": "serve_step"}
+    meta.update(arch=arch, shape=shape_name, quantized=quantized and shape.kind != "train")
+    return fn, args, meta, cfg, shape, params_shape, raw_fn, tc_micro
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             *, force: bool = False, quantized: bool = True, tag: str = "",
+             kv_quant: bool = False) -> dict:
+    name = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        (fn, args, meta, cfg, shape, params_shape, raw_fn,
+         tc_micro) = build_cell(
+            arch, shape_name, mesh, quantized=quantized, kv_quant=kv_quant
+        )
+        rec.update(meta)
+        with mesh, hints.hint_mesh(mesh):
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            # scan-aware analytic cost (cost_analysis counts loop bodies once)
+            jc = JC.jaxpr_cost(raw_fn, *args)
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # backend may not support it
+            mem_d = {"error": str(e)}
+        # weight-stream correction: weights replicate over data; reads/step:
+        # serve/prefill = 1; train ≈ 3 (fwd + remat-fwd + bwd) × microbatches
+        if shape.kind == "train":
+            w_reads = 3.0 * (tc_micro or 1)
+            w_shape_tree = params_shape
+        else:
+            w_reads = 1.0
+            w_shape_tree = args[0]
+        wsb = RL.weight_stream_bytes(w_shape_tree) * w_reads
+        msize = dict(mesh.shape)["model"]
+        hlo = compiled.as_text()
+        if os.environ.get("DRYRUN_SAVE_HLO"):
+            import gzip
+            (out_dir / f"{name}.hlo.txt.gz").write_bytes(
+                gzip.compress(hlo.encode()))
+        coll = HA.collective_bytes(hlo)  # trip-count-aware (per-device bytes)
+        ntot, nemb = RL.count_params(params_shape)
+        mf = RL.model_flops_estimate(cfg, shape, ntot, nemb)
+        chips = mesh.devices.size
+        rl = RL.Roofline(flops=float(jc["flops"]), hbm_bytes=float(jc["bytes"]),
+                         coll_bytes=float(sum(coll.values())) * chips,
+                         chips=chips, model_flops=mf,
+                         weight_stream_bytes=wsb, model_shards=msize)
+        rec.update(
+            ok=True, lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+            chips=chips,
+            cost_xla_per_device={k: cost[k] for k in ("flops", "bytes accessed")
+                                 if k in cost},
+            cost_jaxpr_global={"flops": jc["flops"], "bytes": jc["bytes"]},
+            memory=mem_d, collectives_per_device=coll,
+            n_params=ntot, n_embed_params=nemb,
+            roofline=rl.to_dict(),
+        )
+    except SkipCell as e:
+        rec.update(ok=True, skipped=True, reason=str(e))
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-3000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--fp16-weights", action="store_true",
+                    help="serve cells with unquantized weights (ablation)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mk, out_dir, force=args.force,
+                               tag=args.tag, kv_quant=args.kv_quant,
+                               quantized=not args.fp16_weights)
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec.get("ok") else "FAIL")
+                extra = ""
+                if rec.get("ok") and not rec.get("skipped"):
+                    rl = rec["roofline"]
+                    extra = (f" bottleneck={rl['bottleneck']}"
+                             f" frac={rl['roofline_fraction']:.3f}"
+                             f" compile={rec.get('compile_s', '?')}s")
+                elif not rec.get("ok"):
+                    extra = " " + rec.get("error", "")[:120]
+                print(f"[{status}] {a} × {s} × {mk}{extra}", flush=True)
+                n_ok += rec.get("ok", False)
+                n_fail += not rec.get("ok", False)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

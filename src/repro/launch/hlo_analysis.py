@@ -1,0 +1,135 @@
+"""Structural HLO analysis: collective bytes with while-loop trip counts.
+
+GSPMD inserts collectives INSIDE scan loop bodies; summing naively over the
+HLO text counts them once.  This parser:
+
+1. splits the module into computations,
+2. finds ``while`` ops, their body/condition computations, and recovers the
+   trip count from the condition's ``constant(N)`` bound,
+3. propagates multipliers along the call graph (fusions/calls keep the
+   caller's multiplier; while-bodies multiply by trip count),
+4. sums per-collective result bytes × multiplier.
+
+Result bytes are the per-device data landing in memory for that op — the
+standard per-device proxy for link traffic.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COMP_RE = re.compile(r"^(?:%?([\w.\-_]+))\s*(?:\([^)]*\))?\s*->.*?\{|^ENTRY\s+%?([\w.\-_]+)", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\)[^\n]*?condition=%?([\w.\-_]+)[^\n]*?body=%?([\w.\-_]+)"
+    r"|while\([^)]*\)[^\n]*?body=%?([\w.\-_]+)[^\n]*?condition=%?([\w.\-_]+)"
+)
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-_]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name → body text (brace-matched)."""
+    comps: Dict[str, str] = {}
+    i = 0
+    header = re.compile(
+        r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*(?:\([^{;]*?\))?\s*->[^{\n]*\{", re.M
+    )
+    for m in header.finditer(hlo):
+        name = m.group(1)
+        # brace matching from end of header
+        depth, j = 1, m.end()
+        while j < len(hlo) and depth:
+            if hlo[j] == "{":
+                depth += 1
+            elif hlo[j] == "}":
+                depth -= 1
+            j += 1
+        comps[name] = hlo[m.end(): j]
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, str]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-_]+)", hlo, re.M)
+    if m:
+        return m.group(1)
+    return max(comps, key=lambda k: len(comps[k]))
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt or ""):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str, comps: Dict[str, str]) -> Dict[str, float]:
+    entry = _entry_name(hlo, comps)
+    mult: Dict[str, float] = {entry: 1.0}
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(12):
+        changed = False
+        for name, body in comps.items():
+            m = mult.get(name)
+            if m is None:
+                continue
+            for w in _WHILE_RE.finditer(body):
+                cond = w.group(1) or w.group(4)
+                wbody = w.group(2) or w.group(3)
+                if cond in comps:
+                    trips = trip_count(comps[cond])
+                else:
+                    trips = 1
+                for target, factor in ((wbody, trips), (cond, trips)):
+                    if target in comps:
+                        new = m * factor
+                        if mult.get(target, 0) < new:
+                            mult[target] = new
+                            changed = True
+            for c in _CALL_RE.finditer(body):
+                t = c.group(1)
+                if t in comps and mult.get(t, 0) < m:
+                    mult[t] = m
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+    mult = computation_multipliers(hlo, comps)
+    out: Dict[str, float] = {}
+    for name, body in comps.items():
+        m = mult.get(name, 1.0)
+        for line in body.splitlines():
+            stripped = line.strip()
+            eq = stripped.find("= ")
+            if eq < 0:
+                continue
+            rhs = stripped[eq + 2:]
+            for kind in _COLLECTIVES:
+                # op name directly after the result shape; exclude -done lines
+                if re.match(rf"[\w\[\],{{}}: ]*?\b{kind}(-start)?\(", rhs):
+                    shp = rhs.split(kind)[0]
+                    out[kind] = out.get(kind, 0.0) + _shape_bytes(shp) * m
+                    break
+    return out

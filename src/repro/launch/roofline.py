@@ -1,0 +1,189 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms (seconds), per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs / (chips · peak_FLOPs)
+    memory     = HLO_bytes / (chips · HBM_bw)
+    collective = Σ collective_bytes / (chips · link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed out of the compiled HLO text (GSPMD-inserted all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute result shapes).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"((?:\(|\w+\[)[^)]*?)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt or ""):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind.
+
+    Result bytes ≈ bytes landing in each device's memory for that op — a
+    device-level proxy for link traffic (all-gather result == gathered size;
+    reduce-scatter we take the larger operand side by parsing the line's
+    leading tuple/shape, which for RS is the input).  ``-start/-done`` async
+    pairs are counted once (the ``-done`` line repeats the shape but not the
+    opening paren pattern with operands in current HLO; we dedupe by line).
+    """
+    out: Dict[str, int] = {}
+    seen = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start: hlo_text.find("\n", m.start())]
+        if "-done(" in line:
+            continue
+        if line in seen:
+            continue
+        seen.add(line)
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(line.split(kind)[0])
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    model_flops: float
+    # weights are TP-sharded over "model" but REPLICATED over "data"/"pod":
+    # each data replica streams its own copy, so per-chip weight traffic is
+    # w_bytes/model_shards, not w_bytes/chips.  ``weight_stream_bytes`` is the
+    # total weight bytes read per step (× read count); ``model_shards`` the TP
+    # degree.  hbm_bytes already contains w_bytes once (÷chips downstream);
+    # the correction adds the replicated re-reads.
+    weight_stream_bytes: float = 0.0
+    model_shards: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        extra = 0.0
+        if self.model_shards and self.model_shards < self.chips:
+            extra = self.weight_stream_bytes * (
+                self.chips / self.model_shards - 1.0)
+        return (self.hbm_bytes + extra) / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful work time / achievable step time (higher is better)."""
+        t_star = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / max(t_bound, 1e-12)
+
+    def to_dict(self) -> Dict:
+        return {
+            "weight_stream_bytes": self.weight_stream_bytes,
+            "model_shards": self.model_shards,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def weight_stream_bytes(shape_tree) -> float:
+    """Bytes to stream every weight once (int4-packed uint8 = 1 B/packed)."""
+    import jax
+
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(shape_tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        item = leaf.dtype.itemsize
+        if leaf.dtype.kind == "f":
+            item = min(item, 2)
+        total += n * item
+    return total
+
+
+def count_params(shape_tree) -> Tuple[int, int]:
+    """(total_param_count, embed_param_count) from a shape tree."""
+    import jax
+
+    total = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shape_tree)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if "embed/table" in ps or "lm_head" in ps:
+            embed += n
+    return total, embed
+
+
+def model_flops_estimate(cfg, shape, n_params: int, n_embed: int) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active non-embed."""
+    n = n_params - n_embed
+    if cfg.moe is not None:
+        e = cfg.moe
+        # expert params scale by top_k/num_experts when active
+        expert_per_layer = 3 * cfg.d_model * e.d_expert * e.num_experts
+        layers = cfg.num_layers
+        inactive = expert_per_layer * layers * (1 - e.top_k / e.num_experts)
+        n = n - inactive
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens

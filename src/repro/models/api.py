@@ -1,0 +1,143 @@
+"""Family-dispatching facade over the model zoo.
+
+Gives every arch the same five entry points, so the trainer, serving engine,
+and dry-run never branch on family:
+
+  init_model(key, cfg)                          -> params
+  loss_fn(params, batch, cfg, ...)              -> scalar loss
+  forward_fn(params, batch, cfg, ...)           -> logits
+  prefill_fn(params, batch, cfg, smax, ...)     -> (logits, cache)
+  decode_fn(params, batch, cache, cfg, ...)     -> (logits, cache)
+
+plus ``input_specs(cfg, shape)`` returning ShapeDtypeStruct stand-ins for the
+dry-run (never allocates), and ``init_decode_cache`` / ``cache_specs``.
+
+Batch dicts:
+  train   {tokens, labels[, frames][, embeds]}
+  prefill {tokens[, frames][, embeds]}
+  decode  {token, position}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm as LM
+from repro.models import whisper as W
+
+VLM_PATCHES = 256  # stub: fixed vision-prefix length for qwen2-vl
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.encdec:
+        return W.init_whisper(key, cfg)
+    return LM.init_lm(key, cfg)
+
+
+def _lm_kw(batch):
+    kw = {}
+    if "embeds" in batch:
+        kw["embeds"] = batch["embeds"]
+    return kw
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, *,
+            backend: str = "auto", remat: bool = False) -> jax.Array:
+    if cfg.encdec:
+        return W.whisper_loss(
+            params, batch["frames"], batch["tokens"], batch["labels"], cfg,
+            backend=backend, remat=remat,
+        )
+    return LM.lm_loss(
+        params, batch["tokens"], batch["labels"], cfg, backend=backend,
+        remat=remat, **_lm_kw(batch),
+    )
+
+
+def forward_fn(params, batch, cfg: ModelConfig, *, backend: str = "auto"):
+    if cfg.encdec:
+        return W.whisper_forward(params, batch["frames"], batch["tokens"], cfg,
+                                 backend=backend)
+    logits, _ = LM.lm_forward(params, batch["tokens"], cfg, backend=backend,
+                              **_lm_kw(batch))
+    return logits
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, smax: int, *,
+               backend: str = "auto"):
+    if cfg.encdec:
+        return W.whisper_prefill(params, batch["frames"], batch["tokens"], cfg,
+                                 smax, backend=backend)
+    return LM.lm_prefill(params, batch["tokens"], cfg, smax, backend=backend,
+                         **_lm_kw(batch))
+
+
+def decode_fn(params, batch, cache, cfg: ModelConfig, *,
+              backend: str = "auto"):
+    if cfg.encdec:
+        return W.whisper_decode(params, batch["token"], cache,
+                                batch["position"], cfg, backend=backend)
+    return LM.lm_decode(params, batch["token"], cache, batch["position"], cfg,
+                        backend=backend)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int = 0):
+    if cfg.encdec:
+        return W.init_whisper_cache(cfg, batch, smax, enc_len or smax)
+    return LM.init_cache(cfg, batch, smax)
+
+
+# --------------------------------------------------------------- dry-run ----
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    ``decode`` cells: one new token against a ``seq_len`` cache (cache specs
+    come from :func:`cache_specs`).  ``audio``/``vlm``: modality frontend is a
+    stub — frames/patch embeddings arrive precomputed.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.jdtype
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, dt)
+
+    if shape.kind == "train":
+        if cfg.encdec:
+            h = s // 2
+            return {"frames": emb(b, h, cfg.d_model), "tokens": tok(b, h),
+                    "labels": tok(b, h)}
+        spec = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.family == "vlm":
+            spec["embeds"] = emb(b, VLM_PATCHES, cfg.d_model)
+        return spec
+    if shape.kind == "prefill":
+        if cfg.encdec:
+            h = s // 2
+            return {"frames": emb(b, h, cfg.d_model), "tokens": tok(b, h)}
+        spec = {"tokens": tok(b, s)}
+        if cfg.family == "vlm":
+            spec["embeds"] = emb(b, VLM_PATCHES, cfg.d_model)
+        return spec
+    if shape.kind == "decode":
+        return {"token": tok(b, 1), "position": jax.ShapeDtypeStruct((b,), i32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStruct tree for a decode cell (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        fn = lambda: W.init_whisper_cache(cfg, b, s // 2, s // 2)
+    else:
+        fn = lambda: LM.init_cache(cfg, b, s)
+    return jax.eval_shape(fn)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment skip rules (see DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; dense-attention arch skipped per assignment"
+    return True, ""

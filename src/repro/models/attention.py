@@ -1,0 +1,370 @@
+"""Attention mixers: GQA (with chunked online-softmax "flash" prefill) and
+DeepSeek-V2 MLA (with compressed-latent decode, the memory-saving absorbed
+form).
+
+Cache convention (decode): ``{"k": [B,S,Hkv,Dh], "v": [B,S,Hkv,Dh],
+"lens": [B] int32}`` — ``lens[b]`` is the number of valid cache entries.
+MLA caches the latent instead: ``{"ckv": [B,S,r], "kpe": [B,S,dr], "lens"}``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.hints import shard_hint
+
+NEG_INF = -1e30
+
+
+# =========================================================== GQA attention ==
+def init_gqa(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    return {
+        "wq": L.init_linear(ks[0], d, h * dh, dt, bias=cfg.attn_bias),
+        "wk": L.init_linear(ks[1], d, hkv * dh, dt, bias=cfg.attn_bias),
+        "wv": L.init_linear(ks[2], d, hkv * dh, dt, bias=cfg.attn_bias),
+        "wo": L.init_linear(ks[3], h * dh, d, dt, bias=cfg.attn_bias),
+    }
+
+
+def _qkv(p, x, positions, cfg: ModelConfig, backend: str):
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    q = L.apply_linear(p["wq"], x, backend=backend).reshape(b, t, h, dh)
+    k = L.apply_linear(p["wk"], x, backend=backend).reshape(b, t, hkv, dh)
+    v = L.apply_linear(p["wv"], x, backend=backend).reshape(b, t, hkv, dh)
+    q = L.apply_rope(q, positions, theta=cfg.rope_theta, variant=cfg.rope)
+    k = L.apply_rope(k, positions, theta=cfg.rope_theta, variant=cfg.rope)
+    # anchor layouts: batch on data, heads on model (dropped if indivisible)
+    dp = ("pod", "data")
+    q = shard_hint(q, dp, None, "model", None)
+    k = shard_hint(k, dp, None, "model", None)
+    v = shard_hint(v, dp, None, "model", None)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,          # [B, T, H, Dh]
+    k: jax.Array,          # [B, S, Hkv, Dh]
+    v: jax.Array,          # [B, S, Hkv, Dh]
+    q_pos: jax.Array,      # [B, T]
+    k_pos: jax.Array,      # [B, S]
+    k_valid: Optional[jax.Array] = None,  # [B, S] bool
+    *,
+    causal: bool = True,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, O(q_chunk·kv_chunk) score blocks in memory."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # may differ from dh (MLA)
+    grp = h // hkv
+    scale = dh ** -0.5
+
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    # pad to multiples
+    tp = -(-t // q_chunk) * q_chunk
+    sp = -(-s // kv_chunk) * kv_chunk
+    if k_valid is None:
+        k_valid = jnp.ones((b, s), bool)
+    if tp != t:
+        q = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, tp - t)))
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, sp - s)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, sp - s)))
+
+    nq, nk = tp // q_chunk, sp // kv_chunk
+    # [B, nq, qc, Hkv, grp, Dh] view of q
+    qb = q.reshape(b, nq, q_chunk, hkv, grp, dh)
+    qpb = q_pos.reshape(b, nq, q_chunk)
+    kb = k.reshape(b, nk, kv_chunk, hkv, dh)
+    vb = v.reshape(b, nk, kv_chunk, hkv, dv)
+    kpb = k_pos.reshape(b, nk, kv_chunk)
+    kvb = k_valid.reshape(b, nk, kv_chunk)
+
+    def q_block(carry, qi):
+        del carry
+        qq = qb[:, qi]            # [B,qc,Hkv,grp,Dh]
+        qp = qpb[:, qi]           # [B,qc]
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            kk = kb[:, ki]        # [B,kc,Hkv,Dh]
+            vv = vb[:, ki]
+            kp = kpb[:, ki]       # [B,kc]
+            kval = kvb[:, ki]
+            # scores [B,Hkv,grp,qc,kc]
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qq.astype(jnp.float32), kk.astype(jnp.float32)
+            ) * scale
+            mask = kval[:, None, None, None, :]
+            if causal:
+                mask = mask & (
+                    kp[:, None, None, None, :] <= qp[:, None, None, :, None]
+                )
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vv.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, grp, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, grp, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, grp, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # [B,Hkv,grp,qc,Dh]
+        return None, out.transpose(0, 3, 1, 2, 4)     # [B,qc,Hkv,grp,Dh]
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # blocks: [nq, B, qc, Hkv, grp, Dv]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, tp, h, dv)
+    return out[:, :t].astype(q.dtype)
+
+
+def _full_attention(q, k, v, positions, cfg: ModelConfig, causal: bool):
+    """Dispatch full-sequence attention: Pallas flash (TPU / interpret) or
+    the jnp chunked online-softmax path (CPU, dry-run lowering)."""
+    if cfg.attn_impl in ("flash", "flash_interpret"):
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal,
+            interpret=(cfg.attn_impl == "flash_interpret"),
+        )
+    return chunked_attention(q, k, v, positions, positions, causal=causal)
+
+
+def gqa_prefill(
+    p, x, positions, cfg: ModelConfig, *, backend: str = "auto", causal: bool = True
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg, backend)
+    out = _full_attention(q, k, v, positions, cfg, causal)
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
+
+
+def gqa_decode(
+    p, x, positions, cache: Dict[str, jax.Array], cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against a [B, Smax] cache.  x: [B, 1, D]."""
+    b, t, _ = x.shape
+    assert t == 1, "decode processes one token"
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    grp = h // hkv
+    q, k, v = _qkv(p, x, positions, cfg, backend)
+    lens = cache["lens"]                                   # [B]
+    smax = cache["k"].shape[1]
+    slot = lens                                            # insert position
+    bidx = jnp.arange(b)
+    kpos = jnp.arange(smax)[None, :]                       # [1,S]
+    valid = kpos <= slot[:, None]
+    scale = dh ** -0.5
+    qh = q.reshape(b, hkv, grp, dh)
+
+    if cfg.kv_quant:
+        kq, ks = _kv_quantize(k[:, 0])
+        vq, vs = _kv_quantize(v[:, 0])
+        k_cache = cache["k"].at[bidx, slot].set(kq)
+        v_cache = cache["v"].at[bidx, slot].set(vq)
+        k_sc = cache["k_s"].at[bidx, slot].set(ks.astype(cache["k_s"].dtype))
+        v_sc = cache["v_s"].at[bidx, slot].set(vs.astype(cache["v_s"].dtype))
+        # dequantize in-flight: the dot streams int8 from HBM, the per-head
+        # scale is applied to the (tiny) score/output tensors instead
+        sc = jnp.einsum(
+            "bhgd,bshd->bhgs", qh.astype(jnp.float32),
+            k_cache.astype(jnp.float32),
+        ) * k_sc.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :] * scale
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        pattn = jax.nn.softmax(sc, axis=-1)
+        pv = pattn * v_sc.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        out = jnp.einsum("bhgs,bshd->bhgd", pv, v_cache.astype(jnp.float32))
+        new_cache = {"k": k_cache, "v": v_cache, "k_s": k_sc, "v_s": v_sc,
+                     "lens": lens + 1}
+    else:
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        sc = jnp.einsum(
+            "bhgd,bshd->bhgs", qh.astype(jnp.float32), k_cache.astype(jnp.float32)
+        ) * scale
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        pattn = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhgs,bshd->bhgd", pattn, v_cache.astype(jnp.float32))
+        new_cache = {"k": k_cache, "v": v_cache, "lens": lens + 1}
+    y = L.apply_linear(
+        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
+    )
+    return y, new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Array]:
+    hkv, dh = cfg.num_kv_heads, cfg.hdim
+    if cfg.kv_quant:
+        # int8 cache + per-(position, head) scales: halves HBM traffic of the
+        # memory-bound decode step (beyond-paper; weights are already int4)
+        return {
+            "k": jnp.zeros((batch, smax, hkv, dh), jnp.int8),
+            "v": jnp.zeros((batch, smax, hkv, dh), jnp.int8),
+            "k_s": jnp.zeros((batch, smax, hkv), cfg.jdtype),
+            "v_s": jnp.zeros((batch, smax, hkv), cfg.jdtype),
+            "lens": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, smax, hkv, dh), cfg.jdtype),
+        "v": jnp.zeros((batch, smax, hkv, dh), cfg.jdtype),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _kv_quantize(x: jax.Array):
+    """Per-head symmetric int8: x [B,Hkv,Dh] -> (int8, scale [B,Hkv])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / amax[..., None] * 127.0),
+                 -127, 127).astype(jnp.int8)
+    return q, (amax / 127.0)
+
+
+# ===================================================================== MLA ==
+def init_mla(key, cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": L.init_linear(ks[0], d, m.q_lora_rank, dt),
+        "norm_q": L.init_norm(m.q_lora_rank, "rmsnorm", dt),
+        "wq_b": L.init_linear(ks[1], m.q_lora_rank, h * qk_dim, dt),
+        "wkv_a": L.init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "norm_kv": L.init_norm(m.kv_lora_rank, "rmsnorm", dt),
+        "wkv_b": L.init_linear(
+            ks[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dt
+        ),
+        "wo": L.init_linear(ks[4], h * m.v_head_dim, d, dt),
+    }
+
+
+def _mla_q(p, x, positions, cfg: ModelConfig, backend: str):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = L.apply_linear(p["wq_a"], x, backend=backend)
+    q = L.apply_norm(p["norm_q"], q)
+    q = L.apply_linear(p["wq_b"], q, backend=backend).reshape(b, t, h, qk)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_pe = L.apply_rope(q_pe, positions, theta=cfg.rope_theta, variant="standard")
+    return q_nope, q_pe
+
+
+def _mla_latent(p, x, positions, cfg: ModelConfig, backend: str):
+    m = cfg.mla
+    kv = L.apply_linear(p["wkv_a"], x, backend=backend)
+    ckv, k_pe = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
+    ckv = L.apply_norm(p["norm_kv"], ckv)
+    k_pe = L.apply_rope(
+        k_pe[:, :, None, :], positions, theta=cfg.rope_theta, variant="standard"
+    )[:, :, 0, :]
+    return ckv, k_pe
+
+
+def mla_prefill(
+    p, x, positions, cfg: ModelConfig, *, backend: str = "auto", causal: bool = True
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Expanded (compute-friendly) MLA for prefill; caches the latent."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
+    ckv, k_pe = _mla_latent(p, x, positions, cfg, backend)
+    kvb = L.apply_linear(p["wkv_b"], ckv, backend=backend).reshape(
+        b, t, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], q_pe.shape)], -1
+    )
+    # the concat of head-sharded k_nope with replicated broadcast k_pe leaves
+    # GSPMD free to split the contraction dim (-> giant score all-reduces in
+    # the chunk scans); pin q/k/v to batch-on-data, heads-on-model
+    dp = ("pod", "data")
+    q = shard_hint(q, dp, None, "model", None)
+    k = shard_hint(k, dp, None, "model", None)
+    v = shard_hint(v, dp, None, "model", None)
+    out = chunked_attention(q, k, v, positions, positions, causal=causal)
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
+
+
+def mla_decode(
+    p, x, positions, cache, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-form decode: attention runs in the latent space, so the cache
+    stays compressed ([B,S,r] instead of [B,S,H,Dh]) — MLA's entire point."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    assert t == 1
+    h = cfg.num_heads
+    from repro.core.quantize import QuantizedTensor
+    from repro.core.quantize import dequantize as _deq
+
+    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)    # [B,1,H,*]
+    ckv_new, kpe_new = _mla_latent(p, x, positions, cfg, backend)
+    lens = cache["lens"]
+    bidx = jnp.arange(b)
+    ckv = cache["ckv"].at[bidx, lens].set(ckv_new[:, 0])
+    kpe = cache["kpe"].at[bidx, lens].set(kpe_new[:, 0])
+    smax = ckv.shape[1]
+    valid = jnp.arange(smax)[None, :] <= lens[:, None]
+
+    wkv_b = p["wkv_b"]["w"]
+    if isinstance(wkv_b, QuantizedTensor):
+        wkv_b = _deq(wkv_b, cfg.jdtype)
+    wkv_b = wkv_b.reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[..., : m.qk_nope_head_dim]                  # [r,H,nope]
+    w_v = wkv_b[..., m.qk_nope_head_dim :]                  # [r,H,vdim]
+
+    # absorb: q_lat[b,h,r] = q_nope[b,h,n] · w_k[r,h,n]
+    q_lat = jnp.einsum(
+        "bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32), w_k.astype(jnp.float32)
+    )
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    sc = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, ckv.astype(jnp.float32))
+        + jnp.einsum(
+            "bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32), kpe.astype(jnp.float32)
+        )
+    ) * scale
+    sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+    attn = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", attn, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
+    y = L.apply_linear(
+        p["wo"], out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype), backend=backend
+    )
+    return y, {"ckv": ckv, "kpe": kpe, "lens": lens + 1}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, smax, m.kv_lora_rank), cfg.jdtype),
+        "kpe": jnp.zeros((batch, smax, m.qk_rope_head_dim), cfg.jdtype),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }

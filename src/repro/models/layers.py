@@ -1,0 +1,144 @@
+"""Primitive layers: norms, linears (fp16 or int4-quantized), embeddings, RoPE.
+
+All models are pure pytrees of arrays; a "linear" parameter is either
+``{"w": Array[Ci, Co], ("b": Array[Co])}`` or, after SmoothQuant+ PTQ,
+``{"w": QuantizedTensor, ...}``.  :func:`apply_linear` dispatches on the leaf
+type, so the same model code serves FP16 and W4A16 paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as _calib
+from repro.core.quantize import QuantizedTensor
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- linear ----
+def init_linear(key, ci: int, co: int, dtype, bias: bool = False, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else ci ** -0.5
+    p = {"w": (jax.random.normal(key, (ci, co), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((co,), dtype)
+    return p
+
+
+def apply_linear(p: Params, x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    w = p["w"]
+    col = _calib.current_collector()
+    if col is not None:
+        col.record_input(w, x)
+    if isinstance(w, QuantizedTensor):
+        y = kops.w4a16_matmul(x, w, backend=backend)
+    else:
+        # bf16 dot OUTPUT (MXU still accumulates f32 internally): keeps the
+        # GSPMD-inserted row-parallel psums in bf16 — halves TP all-reduce
+        # bytes vs an f32-output dot (MaxText default)
+        y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms ----
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ----
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def apply_embedding(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits_from_embedding(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x, p["table"].astype(x.dtype).T, preferred_element_type=jnp.float32
+    )
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [..., Dh]; angles: broadcastable to [..., Dh/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def apply_rope(
+    x: jax.Array,               # [B, T, H, Dh]
+    positions: jax.Array,       # [B, T] int32, or [3, B, T] for mrope
+    *,
+    theta: float = 1e4,
+    variant: str = "standard",
+) -> jax.Array:
+    dh = x.shape[-1]
+    if variant == "none":
+        return x
+    if variant == "standard":
+        inv = rope_freqs(dh, theta)                       # [Dh/2]
+        ang = positions[..., None].astype(jnp.float32) * inv  # [B,T,Dh/2]
+        return _rotate(x, ang[:, :, None, :])
+    if variant == "2d":
+        # ChatGLM RoPE-2d: rotary on the first half of head_dim only.
+        half = dh // 2
+        inv = rope_freqs(half, theta)
+        ang = positions[..., None].astype(jnp.float32) * inv
+        xr, xp = x[..., :half], x[..., half:]
+        return jnp.concatenate([_rotate(xr, ang[:, :, None, :]), xp], axis=-1)
+    if variant == "mrope":
+        # Qwen2-VL M-RoPE: head_dim split into 3 sections (t, h, w), each
+        # rotated with its own position stream.  positions: [3, B, T].
+        if positions.ndim == 2:  # text-only fallback: share the stream
+            positions = jnp.stack([positions] * 3)
+        secs = (dh // 2 // 2, dh // 8, dh // 8)  # t/h/w halves of Dh/2
+        inv = rope_freqs(dh, theta)              # [Dh/2]
+        parts, start = [], 0
+        for s, sec in enumerate(secs):
+            p = positions[s][..., None].astype(jnp.float32)  # [B,T,1]
+            parts.append(p * inv[start : start + sec])
+            start += sec
+        if start < inv.shape[0]:
+            parts.append(positions[0][..., None].astype(jnp.float32) * inv[start:])
+        ang = jnp.concatenate(parts, axis=-1)     # [B,T,Dh/2]
+        return _rotate(x, ang[:, :, None, :])
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+# ------------------------------------------------------------------ misc ----
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)

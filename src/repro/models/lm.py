@@ -1,0 +1,469 @@
+"""Decoder-only LM assembly for all assigned families.
+
+Layer stacks are ``lax.scan``s over stacked per-layer params (compact HLO,
+fast compiles even for 88-layer models).  Three stack styles:
+
+- homogeneous (dense / moe / ssm): one scan over ``num_layers`` blocks;
+- hybrid (zamba2): scan over groups of ``attn_every`` mamba blocks followed by
+  one application of a *weight-shared* attention+MLP block (per-application
+  KV caches), plus an unscanned tail of remainder mamba blocks;
+- enc-dec (whisper) lives in ``models/whisper.py``.
+
+Entry points: :func:`init_lm`, :func:`lm_forward` (teacher-forced logits),
+:func:`lm_loss`, :func:`lm_prefill`, :func:`lm_decode`, :func:`init_cache`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------ block defs ----
+def _init_mixer(key, cfg: ModelConfig):
+    if cfg.mixer == "attention":
+        return A.init_gqa(key, cfg)
+    if cfg.mixer == "mla":
+        return A.init_mla(key, cfg)
+    if cfg.mixer == "mamba2":
+        return S.init_mamba2(key, cfg)
+    if cfg.mixer == "rwkv6":
+        return S.init_rwkv6(key, cfg)
+    raise ValueError(cfg.mixer)
+
+
+def _init_block(key, cfg: ModelConfig, *, mixer: Optional[str] = None) -> Params:
+    """One decoder block.  ``mixer`` overrides cfg.mixer (hybrid stacks)."""
+    mixer = mixer or cfg.mixer
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    p: Params = {"norm1": L.init_norm(cfg.d_model, cfg.norm, dt)}
+    sub = cfg.with_(mixer=mixer)
+    p["mixer"] = _init_mixer(k1, sub)
+    if mixer in ("attention", "mla"):
+        p["norm2"] = L.init_norm(cfg.d_model, cfg.norm, dt)
+        p["mlp"] = M.init_moe(k2, cfg) if cfg.moe else M.init_mlp(k2, cfg)
+    elif mixer == "rwkv6":
+        p["norm2"] = L.init_norm(cfg.d_model, cfg.norm, dt)
+        p["mlp"] = S.init_rwkv_channel_mix(k3, cfg)
+    # mamba2 blocks: mixer only (Zamba2-style), no separate MLP
+    return p
+
+
+def _block_forward(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mixer: Optional[str] = None,
+    backend: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence (train / prefill-no-cache) block.  Returns (x, aux)."""
+    mixer = mixer or cfg.mixer
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["norm1"], x)
+    if mixer == "attention":
+        y, _ = A.gqa_prefill(p["mixer"], h, positions, cfg, backend=backend)
+    elif mixer == "mla":
+        y, _ = A.mla_prefill(p["mixer"], h, positions, cfg, backend=backend)
+    elif mixer == "mamba2":
+        y = S.mamba2_forward(p["mixer"], h, cfg, backend=backend)
+    elif mixer == "rwkv6":
+        y = S.rwkv6_forward(p["mixer"], h, cfg, backend=backend)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if "mlp" in p:
+        h2 = L.apply_norm(p["norm2"], x)
+        if mixer == "rwkv6":
+            h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            y2 = S.rwkv_channel_mix(p["mlp"], h2, h2_prev, backend=backend)
+        elif cfg.moe is not None and mixer in ("attention", "mla"):
+            y2, aux = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
+        else:
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+        x = x + y2
+    return x, aux
+
+
+def _block_prefill_cache(p, x, positions, cfg, *, mixer=None, backend="auto"):
+    """Like _block_forward but also returns the mixer cache/state for decode."""
+    mixer = mixer or cfg.mixer
+    h = L.apply_norm(p["norm1"], x)
+    if mixer == "attention":
+        y, cache = A.gqa_prefill(p["mixer"], h, positions, cfg, backend=backend)
+    elif mixer == "mla":
+        y, cache = A.mla_prefill(p["mixer"], h, positions, cfg, backend=backend)
+    elif mixer == "mamba2":
+        y, cache = S.mamba2_forward(
+            p["mixer"], h, cfg, backend=backend, return_state=True
+        )
+    elif mixer == "rwkv6":
+        y, cache = S.rwkv6_forward(
+            p["mixer"], h, cfg, backend=backend, return_state=True
+        )
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if "mlp" in p:
+        h2 = L.apply_norm(p["norm2"], x)
+        if mixer == "rwkv6":
+            h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            y2 = S.rwkv_channel_mix(p["mlp"], h2, h2_prev, backend=backend)
+            cache = dict(cache, ffn_prev=h2[:, -1])
+        elif cfg.moe is not None and mixer in ("attention", "mla"):
+            y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
+        else:
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+        x = x + y2
+    return x, cache
+
+
+def _block_decode(p, x, positions, cache, cfg, *, mixer=None, backend="auto"):
+    mixer = mixer or cfg.mixer
+    h = L.apply_norm(p["norm1"], x)
+    if mixer == "attention":
+        y, cache = A.gqa_decode(p["mixer"], h, positions, cache, cfg, backend=backend)
+    elif mixer == "mla":
+        y, cache = A.mla_decode(p["mixer"], h, positions, cache, cfg, backend=backend)
+    elif mixer == "mamba2":
+        y, cache = S.mamba2_decode(p["mixer"], h, cache, cfg, backend=backend)
+    elif mixer == "rwkv6":
+        ffn_prev = cache.get("ffn_prev")
+        y, tcache = S.rwkv6_decode(
+            p["mixer"], h, {k: cache[k] for k in ("wkv", "x_prev")}, cfg, backend=backend
+        )
+        cache = dict(tcache, ffn_prev=ffn_prev)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if "mlp" in p:
+        h2 = L.apply_norm(p["norm2"], x)
+        if mixer == "rwkv6":
+            y2 = S.rwkv_channel_mix(
+                p["mlp"], h2, cache["ffn_prev"][:, None, :], backend=backend
+            )
+            cache = dict(cache, ffn_prev=h2[:, 0])
+        elif cfg.moe is not None:
+            y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
+        else:
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+        x = x + y2
+    return x, cache
+
+
+# ------------------------------------------------------------- LM wiring ----
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    k = cfg.hybrid.attn_every
+    groups = cfg.num_layers // k
+    tail = cfg.num_layers - groups * k
+    return groups, k, tail
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    p: Params = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(ks[1], cfg.d_model, cfg.vocab_size, dt)
+
+    def stack(init_fn, n, base_key):
+        leaves = [init_fn(jax.random.fold_in(base_key, i)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    if cfg.family == "hybrid":
+        g, k, tail = _hybrid_layout(cfg)
+        p["groups"] = stack(
+            lambda kk: stack(
+                lambda k2: _init_block(k2, cfg, mixer="mamba2"), k, kk
+            ),
+            g,
+            ks[2],
+        )
+        p["shared"] = _init_block(ks[3], cfg.with_(moe=None), mixer="attention")
+        if tail:
+            p["tail"] = stack(
+                lambda kk: _init_block(kk, cfg, mixer="mamba2"), tail, ks[4]
+            )
+    else:
+        p["layers"] = stack(lambda kk: _init_block(kk, cfg), cfg.num_layers, ks[2])
+    return p
+
+
+def _embed_in(p, tokens, cfg, embeds):
+    x = L.apply_embedding(p["embed"], tokens)
+    if embeds is not None:
+        # modality stub: precomputed frame/patch embeddings added at the
+        # (fixed) prefix positions — tokens there are pad (0)
+        n = embeds.shape[1]
+        x = x.at[:, :n, :].add(embeds.astype(x.dtype))
+    return x
+
+
+def _lm_head(p, x, cfg, backend):
+    x = L.apply_norm(p["final_norm"], x)
+    if cfg.tie_embeddings:
+        return L.logits_from_embedding(p["embed"], x)
+    return jnp.dot(
+        x, p["lm_head"]["w"].astype(x.dtype), preferred_element_type=jnp.float32
+    )
+
+
+def _default_positions(cfg, b, t, positions):
+    if positions is not None:
+        return positions
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    return pos
+
+
+def lm_forward(
+    p: Params,
+    tokens: jax.Array,            # [B, T] int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    backend: str = "auto",
+    remat: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward.  Returns (logits [B,T,V], moe_aux)."""
+    b, t = tokens.shape[:2]
+    pos = _default_positions(cfg, b, t, positions)
+    x = _embed_in(p, tokens, cfg, embeds)
+
+    if cfg.family == "hybrid":
+        shared = p["shared"]
+
+        def mamba_body(carry, lp):
+            x = carry
+            x, _ = _block_forward(lp, x, pos, cfg, mixer="mamba2", backend=backend)
+            return x, None
+
+        mamba_body_ = jax.checkpoint(mamba_body) if remat else mamba_body
+
+        def group_body(carry, gp):
+            x = carry
+            x, _ = jax.lax.scan(mamba_body_, x, gp)
+            x, _ = _block_forward(
+                shared, x, pos, cfg.with_(moe=None), mixer="attention",
+                backend=backend,
+            )
+            return x, None
+
+        group_body_ = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(group_body_, x, p["groups"])
+        if "tail" in p:
+            x, _ = jax.lax.scan(mamba_body_, x, p["tail"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _block_forward(lp, x, pos, cfg, backend=backend)
+            return (x, aux + a), None
+
+        body_ = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(body_, (x, jnp.zeros((), jnp.float32)), p["layers"])
+
+    return _lm_head(p, x, cfg, backend), aux
+
+
+def lm_loss(
+    p: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions=None,
+    embeds=None,
+    backend: str = "auto",
+    remat: bool = False,
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    logits, aux = lm_forward(
+        p, tokens, cfg, positions=positions, embeds=embeds, backend=backend,
+        remat=remat,
+    )
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot-reduce (NOT take_along_axis): with vocab-sharded logits this
+    # lowers to a local masked reduce + tiny [B,S] psum instead of an
+    # all-gather/all-reduce of the full logits tensor under GSPMD
+    v = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (logz - gold).mean()
+    return nll + aux_weight * aux
+
+
+# ------------------------------------------------------- prefill / decode ---
+def init_cache(cfg: ModelConfig, batch: int, smax: int) -> Any:
+    """Decode cache pytree (stacked over layers)."""
+    def one_attn():
+        return (
+            A.init_mla_cache(cfg, batch, smax)
+            if cfg.mixer == "mla"
+            else A.init_gqa_cache(cfg, batch, smax)
+        )
+
+    def one_ssm(mixer):
+        if mixer == "mamba2":
+            return S.init_mamba2_state(cfg, batch)
+        st = S.init_rwkv6_state(cfg, batch)
+        st["ffn_prev"] = jnp.zeros((batch, cfg.d_model), cfg.jdtype)
+        return st
+
+    def stackn(mk, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])
+
+    if cfg.family == "hybrid":
+        g, k, tail = _hybrid_layout(cfg)
+        return {
+            "groups": stackn(lambda: stackn(lambda: one_ssm("mamba2"), k), g),
+            "shared": stackn(lambda: A.init_gqa_cache(cfg, batch, smax), g),
+            "tail": stackn(lambda: one_ssm("mamba2"), tail) if tail else None,
+        }
+    if cfg.mixer in ("attention", "mla"):
+        return {"layers": stackn(one_attn, cfg.num_layers)}
+    return {"layers": stackn(lambda: one_ssm(cfg.mixer), cfg.num_layers)}
+
+
+def lm_decode(
+    p: Params,
+    token: jax.Array,             # [B, 1] int32
+    cache: Any,
+    position: jax.Array,          # [B] int32 current position
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Any]:
+    """One decode step.  Returns (logits [B,V], new cache)."""
+    b = token.shape[0]
+    pos = position[:, None]
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(position[None, :, None], (3, b, 1))
+    x = L.apply_embedding(p["embed"], token)
+
+    if cfg.family == "hybrid":
+        shared = p["shared"]
+
+        def mamba_step(x, inp):
+            lp, st = inp
+            x, st = _block_decode(lp, x, pos, st, cfg, mixer="mamba2", backend=backend)
+            return x, st
+
+        def group_step(x, inp):
+            gp, gst, sc = inp
+            x, new_gst = jax.lax.scan(mamba_step, x, (gp, gst))
+            x, new_sc = _block_decode(
+                shared, x, pos, sc, cfg.with_(moe=None), mixer="attention",
+                backend=backend,
+            )
+            return x, (new_gst, new_sc)
+
+        x, (ngst, nsc) = jax.lax.scan(
+            group_step, x, (p["groups"], cache["groups"], cache["shared"])
+        )
+        ntail = cache["tail"]
+        if "tail" in p:
+            x, ntail = jax.lax.scan(mamba_step, x, (p["tail"], cache["tail"]))
+        new_cache = {"groups": ngst, "shared": nsc, "tail": ntail}
+    else:
+        def step(x, inp):
+            lp, st = inp
+            x, st = _block_decode(lp, x, pos, st, cfg, backend=backend)
+            return x, st
+
+        x, nst = jax.lax.scan(step, x, (p["layers"], cache["layers"]))
+        new_cache = {"layers": nst}
+
+    logits = _lm_head(p, x, cfg, backend)[:, 0]
+    return logits, new_cache
+
+
+def lm_prefill(
+    p: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    smax: int,
+    *,
+    positions=None,
+    embeds=None,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Any]:
+    """Process a prompt, building a decode cache padded to ``smax``.
+
+    For attention archs the per-layer KV is computed in the scan and written
+    into the preallocated cache; SSM/hybrid archs replay the prompt through
+    the recurrent decode path chunk-free (their state is O(1)).
+    Returns (last-token logits [B,V], cache).
+    """
+    b, t = tokens.shape[:2]
+    pos = _default_positions(cfg, b, t, positions)
+    cache = init_cache(cfg, b, smax)
+    x = _embed_in(p, tokens, cfg, embeds)
+
+    def pad_kv(ct, new):
+        """Write freshly-built prefix cache into the smax-padded slab."""
+        upd = dict(ct)
+        for key in ct:
+            if key == "lens":
+                upd["lens"] = new["lens"]
+            elif key in new and ct[key].ndim >= 2:
+                upd[key] = jax.lax.dynamic_update_slice(
+                    ct[key], new[key].astype(ct[key].dtype),
+                    (0,) * ct[key].ndim,
+                )
+            elif key in new:
+                upd[key] = new[key]
+        return upd
+
+    if cfg.family == "hybrid":
+        shared = p["shared"]
+
+        def mamba_body(x, inp):
+            lp, st = inp
+            x, new = _block_prefill_cache(lp, x, pos, cfg, mixer="mamba2", backend=backend)
+            return x, new
+
+        def group_body(x, inp):
+            gp, gst, sc = inp
+            x, new_gst = jax.lax.scan(mamba_body, x, (gp, gst))
+            x, new_sc = _block_prefill_cache(
+                shared, x, pos, cfg.with_(moe=None), mixer="attention",
+                backend=backend,
+            )
+            return x, (new_gst, pad_kv(sc, new_sc))
+
+        x, (ngr, nsh) = jax.lax.scan(
+            group_body, x, (p["groups"], cache["groups"], cache["shared"])
+        )
+        ntail = cache["tail"]
+        if "tail" in p:
+            x, ntail = jax.lax.scan(mamba_body, x, (p["tail"], cache["tail"]))
+        logits = _lm_head(p, x, cfg, backend)[:, -1]
+        return logits, {"groups": ngr, "shared": nsh, "tail": ntail}
+
+    def body(x, inp):
+        lp, ct = inp
+        x, new = _block_prefill_cache(lp, x, pos, cfg, backend=backend)
+        if cfg.mixer in ("attention", "mla"):
+            new = pad_kv(ct, new)
+        return x, new
+
+    x, layers_cache = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
+    logits = _lm_head(p, x, cfg, backend)[:, -1]
+    return logits, {"layers": layers_cache}

@@ -1,0 +1,187 @@
+"""Channel mixers: SwiGLU / GELU MLPs and sort-based top-k MoE.
+
+The MoE uses equal-capacity sort-based dispatch (MaxText-style): tokens are
+sorted by assigned expert, sliced into an ``[E, C, D]`` buffer (overflow
+dropped, a standard capacity-factor trade-off), run through stacked expert
+weights with one einsum (EP-shardable on the expert axis), and combined back
+with the router weights.  No ``[tokens, E, C]`` one-hot is ever materialized.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import hints as H
+
+
+# ------------------------------------------------------------- dense MLP ----
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "gate": L.init_linear(ks[0], d, f, dt),
+            "up": L.init_linear(ks[1], d, f, dt),
+            "down": L.init_linear(ks[2], f, d, dt),
+        }
+    return {  # gelu (whisper/starcoder-style), biases allowed
+        "up": L.init_linear(ks[1], d, f, dt, bias=cfg.attn_bias),
+        "down": L.init_linear(ks[2], f, d, dt, bias=cfg.attn_bias),
+    }
+
+
+def apply_mlp(p: Dict[str, Any], x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    if "gate" in p:
+        h = L.swiglu(
+            L.apply_linear(p["gate"], x, backend=backend),
+            L.apply_linear(p["up"], x, backend=backend),
+        )
+    else:
+        h = L.gelu(L.apply_linear(p["up"], x, backend=backend))
+    return L.apply_linear(p["down"], h, backend=backend)
+
+
+# ------------------------------------------------------------------- MoE ----
+def init_moe(key, cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_expert
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "router": L.init_linear(ks[0], d, m.num_experts, dt),
+        # stacked expert weights [E, D, F] / [E, F, D] (swiglu experts)
+        "experts": {
+            "gate": (jax.random.normal(ks[1], (m.num_experts, d, fe), jnp.float32) * d**-0.5).astype(dt),
+            "up": (jax.random.normal(ks[2], (m.num_experts, d, fe), jnp.float32) * d**-0.5).astype(dt),
+            "down": (jax.random.normal(ks[3], (m.num_experts, fe, d), jnp.float32) * fe**-0.5).astype(dt),
+        },
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=fe * m.num_shared_experts)
+    return p
+
+
+def _dispatch_indices(expert_ids: jax.Array, num_experts: int, capacity: int):
+    """Sort-based dispatch bookkeeping.
+
+    expert_ids: [N] int32 (token-slot → expert).  Returns (buf_idx [N],
+    keep [N] bool, inv_perm) such that token-slot i goes to flat buffer row
+    ``buf_idx[i]`` (= expert*capacity + position) iff keep[i].
+    """
+    n = expert_ids.shape[0]
+    sort_idx = jnp.argsort(expert_ids, stable=True)            # [N]
+    sorted_ids = expert_ids[sort_idx]
+    # position of each sorted slot within its expert
+    counts = jnp.bincount(expert_ids, length=num_experts)      # [E]
+    starts = jnp.cumsum(counts) - counts                       # [E]
+    pos_in_expert = jnp.arange(n) - starts[sorted_ids]
+    keep_sorted = pos_in_expert < capacity
+    buf_sorted = sorted_ids * capacity + jnp.minimum(pos_in_expert, capacity - 1)
+    # back to original slot order
+    inv = jnp.argsort(sort_idx, stable=True)
+    return buf_sorted[inv], keep_sorted[inv]
+
+
+def apply_moe(
+    p: Dict[str, Any],
+    x: jax.Array,            # [B, T, D]
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss) — aux is the standard load-balancing loss."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+
+    router_logits = L.apply_linear(p["router"], xf, backend=backend).astype(
+        jnp.float32
+    )                                                           # [N, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, m.top_k)              # [N, K]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # hierarchical dispatch: when a mesh is installed, tokens are blocked by
+    # the data(-parallel) axis so the argsort/bincount bookkeeping stays
+    # LOCAL to each data shard (a global sort would all-reduce u32 masks
+    # across shards); each block fills its own capacity slice per expert
+    import os
+    mesh = H.current_mesh()
+    nblk = 1
+    if mesh is not None and not os.environ.get("REPRO_NO_HINTS"):
+        sizes = dict(mesh.shape)
+        nblk = sizes.get("data", 1) * sizes.get("pod", 1)
+        if n % nblk != 0:
+            nblk = 1
+    n_loc = n // nblk
+    capacity = max(int(n_loc * m.top_k / m.num_experts * m.capacity_factor),
+                   m.top_k)
+    flat_e = gate_e.reshape(nblk, n_loc * m.top_k).astype(jnp.int32)
+    buf_idx, keep = jax.vmap(
+        lambda e: _dispatch_indices(e, m.num_experts, capacity)
+    )(flat_e)                                                    # [nblk, n_loc*K]
+
+    # gather-based dispatch: scatter only the tiny int32 slot→token map, then
+    # GATHER the wide rows (a direct scatter of [slots, D] lowers to a u32
+    # collision-mask all-reduce under GSPMD — ~500 GB/device on deepseek)
+    slot_tok = jnp.full((nblk, m.num_experts * capacity), -1, jnp.int32)
+    tok_of_slotsrc = jnp.arange(n_loc * m.top_k, dtype=jnp.int32) // m.top_k
+    slot_tok = jax.vmap(
+        lambda st, i, k: st.at[jnp.where(k, i, st.shape[0])].set(
+            tok_of_slotsrc, mode="drop")
+    )(slot_tok, buf_idx, keep)
+    xblk = xf.reshape(nblk, n_loc, d)
+    buf = jax.vmap(lambda xb, st: xb[jnp.maximum(st, 0)])(xblk, slot_tok)
+    buf = jnp.where((slot_tok >= 0)[..., None], buf, 0)
+    buf = buf.reshape(nblk, m.num_experts, capacity, d)
+    buf = H.shard_hint(buf, ("pod", "data"), "model", None, None)
+
+    # expert compute (EP-shardable einsum over stacked weights); expert
+    # weights may be int4-quantized [E, Ci, Co] tensors after PTQ
+    from repro.core.quantize import QuantizedTensor, dequantize
+
+    def _w(e):
+        if isinstance(e, QuantizedTensor):
+            return dequantize(e, jnp.float32)
+        return e.astype(jnp.float32)
+
+    ew = p["experts"]
+    gate_h = jnp.einsum("becd,edf->becf", buf.astype(jnp.float32), _w(ew["gate"]))
+    up_h = jnp.einsum("becd,edf->becf", buf.astype(jnp.float32), _w(ew["up"]))
+    hidden = jax.nn.silu(gate_h) * up_h
+    from repro.core import calibration as _calib
+
+    col = _calib.current_collector()
+    if col is not None:  # per-expert input stats (einsums bypass apply_linear)
+        col.record_explicit(
+            ("mlp", "experts", "gate"),
+            jnp.max(jnp.abs(buf.astype(jnp.float32)), axis=(0, 2)),
+        )
+        col.record_explicit(
+            ("mlp", "experts", "down"), jnp.max(jnp.abs(hidden), axis=(0, 2))
+        )
+    out = jnp.einsum("becf,efd->becd", hidden, _w(ew["down"])).astype(x.dtype)
+
+    # combine (block-local gather, mirroring the dispatch)
+    out_flat = out.reshape(nblk, m.num_experts * capacity, d)
+    gathered = jax.vmap(lambda o, i: o[i])(out_flat, buf_idx)   # [nblk, n_loc*K, D]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    weighted = gathered.astype(jnp.float32) * gate_w.reshape(nblk, -1)[..., None]
+    y = weighted.reshape(n, m.top_k, d).sum(1).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xf, backend=backend)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)                                           # [E]
+    ce = jnp.zeros((m.num_experts,)).at[flat_e.reshape(-1)].add(1.0) / max(
+        n * m.top_k, 1)
+    aux = m.num_experts * jnp.sum(me * ce)
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,387 @@
+"""Sub-quadratic sequence mixers: Mamba2 (chunked SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD algorithm — quadratic attention-like form within
+length-L chunks, linear state passing between chunks — so training/prefill
+memory is O(T·L) instead of O(T²) and only chunk-boundary states materialize.
+
+RWKV6 implements the Finch data-dependent per-channel decay
+``w_t = exp(-exp(w0 + lora(x̃_t)))`` with a sequential ``lax.scan`` over time
+(compact HLO; per-step state [B,H,K,V]).  Token-shift mixing uses learned
+per-channel lerps (the ddlerp LoRA on the *mix* is omitted — documented
+simplification; the decay itself, RWKV6's hallmark, is data-dependent).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.hints import shard_hint
+
+
+# ================================================================= Mamba2 ==
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    headdim = cfg.ssm_head_dim
+    nheads = d_inner // headdim
+    return d_inner, headdim, nheads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Projections are kept SEPARATE (z / x / BC / dt) rather than one packed
+    in_proj: z and x must be column-sharded head-aligned on the TP axis, while
+    B/C are tiny and stay replicated — a packed layout would cut across them."""
+    d = cfg.d_model
+    d_inner, hp, nh, n = mamba_dims(cfg)
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": L.init_linear(ks[0], d, d_inner, dt),
+        "in_x": L.init_linear(ks[1], d, d_inner, dt),
+        "in_bc": L.init_linear(ks[2], d, 2 * n, dt),
+        "in_dt": L.init_linear(ks[3], d, nh, dt),
+        "conv_x_w": (jax.random.normal(ks[4], (cfg.conv_kernel, d_inner), jnp.float32) * 0.2).astype(dt),
+        "conv_x_b": jnp.zeros((d_inner,), dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (cfg.conv_kernel, 2 * n), jnp.float32) * 0.2).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * n,), dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "d_skip": jnp.ones((nh,), dt),
+        "norm": L.init_norm(d_inner, "rmsnorm", dt),
+        "out_proj": L.init_linear(jax.random.fold_in(ks[0], 7), d_inner, d, dt),
+    }
+
+
+def _in_projections(p, xin, cfg, backend):
+    z = L.apply_linear(p["in_z"], xin, backend=backend)
+    x = L.apply_linear(p["in_x"], xin, backend=backend)
+    bc = L.apply_linear(p["in_bc"], xin, backend=backend)
+    dt = L.apply_linear(p["in_dt"], xin, backend=backend)
+    return z, x, bc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: [B,T,C]; w: [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B,T,H,P]  (dt-scaled input)
+    la: jax.Array,     # [B,T,H]    log-decay per step (negative)
+    bm: jax.Array,     # [B,T,N]
+    cm: jax.Array,     # [B,T,N]
+    h0: jax.Array | None = None,   # [B,H,P,N] initial state
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,T,H,P], final state [B,H,P,N])."""
+    b, t, h, p = x.shape
+    n = bm.shape[-1]
+    lchunk = min(chunk, t)
+    tp = -(-t // lchunk) * lchunk
+    if tp != t:
+        x = jnp.pad(x, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, tp - t), (0, 0)))  # pad decay 0 = no-op
+        bm = jnp.pad(bm, ((0, 0), (0, tp - t), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, tp - t), (0, 0)))
+    nc = tp // lchunk
+    # chunk-major layouts for the scan
+    xc = x.reshape(b, nc, lchunk, h, p).transpose(1, 0, 2, 3, 4)
+    lac = la.reshape(b, nc, lchunk, h).transpose(1, 0, 2, 3)
+    bc = bm.reshape(b, nc, lchunk, n).transpose(1, 0, 2, 3)
+    cc = cm.reshape(b, nc, lchunk, n).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((lchunk, lchunk), bool))
+
+    def chunk_step(hprev, inp):
+        xk, lk, bk, ck = inp                    # [B,L,H,P], [B,L,H], [B,L,N] x2
+        xk32 = xk.astype(jnp.float32)
+        cum = jnp.cumsum(lk, axis=1)            # Λ_i   [B,L,H]
+        total = cum[:, -1, :]                   # [B,H]
+        # intra-chunk: y_i += Σ_{j<=i} (C_i·B_j) exp(Λ_i-Λ_j) x_j
+        cb = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # [B,i,j,H]
+        # mask BEFORE exp: for j>i the diff is positive and exp overflows,
+        # which would poison gradients through the where (NaN-grad trap).
+        m = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, m, xk32)
+        # inter-chunk: y_i += C_i · (exp(Λ_i) H_prev)
+        y_inter = jnp.einsum(
+            "bih,bin,bhpn->bihp", jnp.exp(cum), ck.astype(jnp.float32), hprev
+        )
+        # state to end of chunk: H = exp(total) H_prev + Σ_j exp(Λ_L-Λ_j) x_j B_j
+        dte = jnp.exp(total[:, None, :] - cum)  # [B,L,H]
+        s_c = jnp.einsum("bjh,bjhp,bjn->bhpn", dte, xk32, bk.astype(jnp.float32))
+        hnew = hprev * jnp.exp(total)[:, :, None, None] + s_c
+        return hnew, y_intra + y_inter
+
+    hinit = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    hlast, ys = jax.lax.scan(chunk_step, hinit, (xc, lac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, p)[:, :t]
+    return y.astype(x.dtype), hlast
+
+
+def mamba2_forward(
+    p: Dict[str, Any],
+    xin: jax.Array,          # [B,T,D]
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+    return_state: bool = False,
+):
+    d_inner, hp, nh, n = mamba_dims(cfg)
+    z, x_raw, bc_raw, dt = _in_projections(p, xin, cfg, backend)
+    x = _causal_conv(x_raw, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc_raw, p["conv_bc_w"], p["conv_bc_b"])
+    bm, cm = jnp.split(bc, [n], axis=-1)
+    b_, t_, _ = xin.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # [H] negative
+    la = dt * a                                        # [B,T,H]
+    xh = x.reshape(b_, t_, nh, hp)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, hlast = ssd_chunked(xdt.astype(xin.dtype), la, bm, cm)
+    y = y + xh.astype(jnp.float32).astype(xin.dtype) * p["d_skip"][None, None, :, None].astype(xin.dtype)
+    y = y.reshape(b_, t_, d_inner)
+    y = L.apply_norm(p["norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    out = L.apply_linear(p["out_proj"], y, backend=backend)
+    if not return_state:
+        return out
+    km1 = cfg.conv_kernel - 1
+
+    def tail(a):
+        return a[:, -km1:, :] if t_ >= km1 else jnp.pad(
+            a, ((0, 0), (km1 - t_, 0), (0, 0))
+        )
+
+    return out, {"h": hlast, "conv_x": tail(x_raw), "conv_bc": tail(bc_raw)}
+
+
+def mamba2_decode(
+    p: Dict[str, Any],
+    xin: jax.Array,          # [B,1,D]
+    state: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-step recurrent update.
+    state: {"h": [B,H,P,N], "conv_x": [B,K-1,d_inner], "conv_bc": [B,K-1,2N]}."""
+    d_inner, hp, nh, n = mamba_dims(cfg)
+    b = xin.shape[0]
+    z, x_raw, bc_raw, dt = _in_projections(p, xin, cfg, backend)
+
+    def conv_step(hist, new, w, bias):
+        window = jnp.concatenate([hist, new[:, None]], 1)  # [B,K,C]
+        out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        return jax.nn.silu(out + bias.astype(jnp.float32)).astype(new.dtype), window[:, 1:]
+
+    x1, new_conv_x = conv_step(state["conv_x"], x_raw[:, 0], p["conv_x_w"], p["conv_x_b"])
+    bc1, new_conv_bc = conv_step(state["conv_bc"], bc_raw[:, 0], p["conv_bc_w"], p["conv_bc_b"])
+    b1, c1 = jnp.split(bc1, [n], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * a)                             # [B,H]
+    xh = x1.reshape(b, nh, hp).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt1[..., None], b1.astype(jnp.float32))
+    h = state["h"] * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c1.astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(xin.dtype)
+    y = L.apply_norm(p["norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    out = L.apply_linear(p["out_proj"], y, backend=backend)
+    new_state = {"h": h, "conv_x": new_conv_x, "conv_bc": new_conv_bc}
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d_inner, hp, nh, n = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, hp, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner), cfg.jdtype),
+        "conv_bc": jnp.zeros((batch, cfg.conv_kernel - 1, 2 * n), cfg.jdtype),
+    }
+
+
+# ================================================================== RWKV6 ==
+RWKV_LORA = 64
+
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.ssm_head_dim
+    return cfg.d_model // k, k  # (heads, head_dim)
+
+
+def init_rwkv6(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    nh, hk = rwkv_dims(cfg)
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 9)
+    return {
+        # token-shift mix coefficients (r,k,v,g,w)
+        "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dt),
+        "wr": L.init_linear(ks[1], d, d, dt),
+        "wk": L.init_linear(ks[2], d, d, dt),
+        "wv": L.init_linear(ks[3], d, d, dt),
+        "wg": L.init_linear(ks[4], d, d, dt),
+        "wo": L.init_linear(ks[5], d, d, dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(xw @ A) @ B))
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.5 - 5.0).astype(dt),
+        "w_lora_a": (jax.random.normal(ks[7], (d, RWKV_LORA), jnp.float32) * d**-0.5).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[8], (RWKV_LORA, d), jnp.float32) * RWKV_LORA**-0.5).astype(dt),
+        "u_bonus": jnp.zeros((d,), dt),
+        # RWKV6 uses GroupNorm with one group per head: per-head normalization
+        # is local under head-sharded TP (no cross-shard reduction)
+        "ln_x": {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)},
+    }
+
+
+def _head_groupnorm(p, y: jax.Array, nh: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm(groups=heads) over the last dim.  y: [..., D]."""
+    shp = y.shape
+    yf = y.astype(jnp.float32).reshape(*shp[:-1], nh, shp[-1] // nh)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yf = yf.reshape(shp)
+    return (yf * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _rwkv_inputs(p, x, x_prev, backend):
+    """x: [B,T,D]; x_prev: [B,T,D] shifted-by-one input."""
+    mix = p["mix"].astype(jnp.float32)
+    xf, pf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    mixed = [pf + (xf - pf) * mix[i] for i in range(5)]
+    xr, xk, xv, xg, xw = [m.astype(x.dtype) for m in mixed]
+    r = L.apply_linear(p["wr"], xr, backend=backend)
+    k = L.apply_linear(p["wk"], xk, backend=backend)
+    v = L.apply_linear(p["wv"], xv, backend=backend)
+    g = L.apply_linear(p["wg"], xg, backend=backend)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+    logw = p["w0"].astype(jnp.float32) + lora @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                        # [B,T,D] in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv6_forward(
+    p: Dict[str, Any],
+    xin: jax.Array,          # [B,T,D]
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+    return_state: bool = False,
+):
+    b, t, d = xin.shape
+    nh, hk = rwkv_dims(cfg)
+    x_prev = jnp.pad(xin, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv_inputs(p, xin, x_prev, backend)
+    rh = r.reshape(b, t, nh, hk).astype(jnp.float32)
+    kh = k.reshape(b, t, nh, hk).astype(jnp.float32)
+    vh = v.reshape(b, t, nh, hk).astype(jnp.float32)
+    wh = w.reshape(b, t, nh, hk)
+    u = p["u_bonus"].astype(jnp.float32).reshape(nh, hk)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                           # [B,H,K] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, out
+
+    s0 = jnp.zeros((b, nh, hk, hk), jnp.float32)
+    dp = ("pod", "data")
+    # pin the time-major scan operands to (T, batch→data, heads→model, K):
+    # without the anchors GSPMD replicates the whole [B,T,D] stream around
+    # the sequential scan (8 full-activation all-gathers per layer)
+    hint = lambda a: shard_hint(a, None, dp, "model", None)
+    s0 = shard_hint(s0, dp, "model", None, None)
+    s_last, outs = jax.lax.scan(
+        step,
+        s0,
+        (
+            hint(rh.transpose(1, 0, 2, 3)),
+            hint(kh.transpose(1, 0, 2, 3)),
+            hint(vh.transpose(1, 0, 2, 3)),
+            hint(wh.transpose(1, 0, 2, 3)),
+        ),
+    )
+    y = hint(outs).transpose(1, 0, 2, 3).reshape(b, t, d)
+    y = _head_groupnorm(p["ln_x"], y.astype(xin.dtype), nh)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(xin.dtype)
+    out = L.apply_linear(p["wo"], y, backend=backend)
+    if not return_state:
+        return out
+    return out, {"wkv": s_last, "x_prev": xin[:, -1]}
+
+
+def rwkv6_decode(
+    p: Dict[str, Any],
+    xin: jax.Array,          # [B,1,D]
+    state: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """state: {"wkv": [B,H,K,V] f32, "x_prev": [B,D]}."""
+    b, _, d = xin.shape
+    nh, hk = rwkv_dims(cfg)
+    r, k, v, g, w = _rwkv_inputs(p, xin, state["x_prev"][:, None, :], backend)
+    rt = r.reshape(b, nh, hk).astype(jnp.float32)
+    kt = k.reshape(b, nh, hk).astype(jnp.float32)
+    vt = v.reshape(b, nh, hk).astype(jnp.float32)
+    wt = w.reshape(b, nh, hk)
+    u = p["u_bonus"].astype(jnp.float32).reshape(nh, hk)
+    s = state["wkv"]
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+    s_new = s * wt[..., None] + kv
+    y = out.reshape(b, 1, d).astype(xin.dtype)
+    y = _head_groupnorm(p["ln_x"], y, nh)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(xin.dtype)
+    y = L.apply_linear(p["wo"], y, backend=backend)
+    return y, {"wkv": s_new, "x_prev": xin[:, 0]}
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jax.random.uniform(ks[0], (2, d), jnp.float32).astype(dt),  # (k, r)
+        "wk": L.init_linear(ks[1], d, f, dt),
+        "wv": L.init_linear(ks[2], f, d, dt),
+        "wr": L.init_linear(jax.random.fold_in(ks[0], 1), d, d, dt),
+    }
+
+
+def rwkv_channel_mix(
+    p: Dict[str, Any], x: jax.Array, x_prev: jax.Array, *, backend: str = "auto"
+) -> jax.Array:
+    """Finch FFN: y = sigmoid(Wr x_r) ⊙ Wv relu(Wk x_k)²."""
+    mix = p["mix"].astype(jnp.float32)
+    xf, pf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    xk = (pf + (xf - pf) * mix[0]).astype(x.dtype)
+    xr = (pf + (xf - pf) * mix[1]).astype(x.dtype)
+    k = L.apply_linear(p["wk"], xk, backend=backend)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(
+        L.apply_linear(p["wr"], xr, backend=backend).astype(jnp.float32)
+    ).astype(x.dtype)
+    return r * L.apply_linear(p["wv"], k, backend=backend)
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    nh, hk = rwkv_dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, nh, hk, hk), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), cfg.jdtype),
+    }

@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings ``[B, T_enc, D]`` directly to the encoder.
+Positional encoding is sinusoidal on both sides (the real model uses learned
+decoder positions capped at 448; our assigned shapes need up to 256k decoder
+positions, so sinusoidal is used throughout — documented deviation).
+
+An assigned shape ``seq_len`` is split evenly: ``T_enc = T_dec = seq_len//2``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mlp as M
+
+Params = Dict[str, Any]
+
+
+def sinusoid(t: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * jnp.log(10000.0) / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_xattn_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "norm1": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "self_attn": A.init_gqa(ks[0], cfg),
+        "norm2": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "cross_attn": A.init_gqa(ks[1], cfg),
+        "norm3": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "mlp": M.init_mlp(ks[2], cfg),
+    }
+
+
+def init_whisper(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+
+    def stack(init_fn, n, base):
+        leaves = [init_fn(jax.random.fold_in(base, i)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg.norm, dt),
+            "self_attn": A.init_gqa(k1, cfg),
+            "norm2": L.init_norm(cfg.d_model, cfg.norm, dt),
+            "mlp": M.init_mlp(k2, cfg),
+        }
+
+    return {
+        "enc": {
+            "layers": stack(enc_block, cfg.enc_layers, ks[0]),
+            "final_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        },
+        "dec": {
+            "embed": L.init_embedding(ks[1], cfg.vocab_size, cfg.d_model, dt),
+            "layers": stack(lambda k: _init_xattn_block(k, cfg), cfg.num_layers, ks[2]),
+            "final_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        },
+    }
+
+
+def encode(p: Params, frames: jax.Array, cfg: ModelConfig, *, backend="auto",
+           remat: bool = False) -> jax.Array:
+    b, t, d = frames.shape
+    x = frames + sinusoid(t, d).astype(frames.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x)
+        y, _ = A.gqa_prefill(lp["self_attn"], h, pos, cfg, backend=backend, causal=False)
+        x = x + y
+        h = L.apply_norm(lp["norm2"], x)
+        x = x + M.apply_mlp(lp["mlp"], h, backend=backend)
+        return x, None
+
+    body_ = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_, x, p["enc"]["layers"])
+    return L.apply_norm(p["enc"]["final_norm"], x)
+
+
+def _cross_attend(lp, x, enc_out, cfg, *, backend="auto"):
+    """Non-causal cross attention (q from decoder, k/v from encoder)."""
+    b, t, _ = x.shape
+    s = enc_out.shape[1]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    q = L.apply_linear(lp["wq"], x, backend=backend).reshape(b, t, h, dh)
+    k = L.apply_linear(lp["wk"], enc_out, backend=backend).reshape(b, s, hkv, dh)
+    v = L.apply_linear(lp["wv"], enc_out, backend=backend).reshape(b, s, hkv, dh)
+    qp = jnp.zeros((b, t), jnp.int32)
+    kp = jnp.zeros((b, s), jnp.int32)
+    out = A.chunked_attention(q, k, v, qp, kp, causal=False)
+    return L.apply_linear(lp["wo"], out.reshape(b, t, -1), backend=backend)
+
+
+def _dec_block(lp, x, pos, enc_out, cfg, *, backend="auto"):
+    h = L.apply_norm(lp["norm1"], x)
+    y, kv = A.gqa_prefill(lp["self_attn"], h, pos, cfg, backend=backend)
+    x = x + y
+    h = L.apply_norm(lp["norm2"], x)
+    x = x + _cross_attend(lp["cross_attn"], h, enc_out, cfg, backend=backend)
+    h = L.apply_norm(lp["norm3"], x)
+    x = x + M.apply_mlp(lp["mlp"], h, backend=backend)
+    return x, kv
+
+
+def whisper_forward(
+    p: Params,
+    frames: jax.Array,           # [B, T_enc, D] stub embeddings
+    tokens: jax.Array,           # [B, T_dec]
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+    remat: bool = False,
+) -> jax.Array:
+    """Teacher-forced logits [B, T_dec, V]."""
+    enc_out = encode(p, frames, cfg, backend=backend, remat=remat)
+    b, t = tokens.shape
+    x = L.apply_embedding(p["dec"]["embed"], tokens)
+    x = x + sinusoid(t, cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, lp):
+        x, _ = _dec_block(lp, x, pos, enc_out, cfg, backend=backend)
+        return x, None
+
+    body_ = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_, x, p["dec"]["layers"])
+    x = L.apply_norm(p["dec"]["final_norm"], x)
+    return L.logits_from_embedding(p["dec"]["embed"], x)
+
+
+def whisper_loss(p, frames, tokens, labels, cfg, *, backend="auto", remat=False):
+    logits = whisper_forward(p, frames, tokens, cfg, backend=backend,
+                             remat=remat).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return (logz - gold).mean()
+
+
+# --------------------------------------------------------- decode w/cache ---
+def init_whisper_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int):
+    def one():
+        return {
+            "self": A.init_gqa_cache(cfg, batch, smax),
+            # cross K/V computed once at prefill
+            "xk": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hdim), cfg.jdtype),
+            "xv": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hdim), cfg.jdtype),
+        }
+
+    caches = [one() for _ in range(cfg.num_layers)]
+    return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *caches)}
+
+
+def whisper_prefill(
+    p, frames, tokens, cfg: ModelConfig, smax: int, *, backend="auto"
+) -> Tuple[jax.Array, Any]:
+    enc_out = encode(p, frames, cfg, backend=backend)
+    b, t = tokens.shape
+    enc_len = enc_out.shape[1]
+    cache = init_whisper_cache(cfg, b, smax, enc_len)
+    x = L.apply_embedding(p["dec"]["embed"], tokens)
+    x = x + sinusoid(t, cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h_, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+
+    def body(x, inp):
+        lp, ct = inp
+        x, kv = _dec_block(lp, x, pos, enc_out, cfg, backend=backend)
+        xk = L.apply_linear(lp["cross_attn"]["wk"], enc_out, backend=backend)
+        xv = L.apply_linear(lp["cross_attn"]["wv"], enc_out, backend=backend)
+        new = {
+            "self": {
+                "k": jax.lax.dynamic_update_slice(ct["self"]["k"], kv["k"], (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(ct["self"]["v"], kv["v"], (0, 0, 0, 0)),
+                "lens": kv["lens"],
+            },
+            "xk": xk.reshape(b, enc_len, hkv, dh),
+            "xv": xv.reshape(b, enc_len, hkv, dh),
+        }
+        return x, new
+
+    x, layers = jax.lax.scan(body, x, (p["dec"]["layers"], cache["layers"]))
+    x = L.apply_norm(p["dec"]["final_norm"], x)
+    logits = L.logits_from_embedding(p["dec"]["embed"], x)[:, -1]
+    return logits, {"layers": layers}
+
+
+def whisper_decode(
+    p, token, cache, position, cfg: ModelConfig, *, backend="auto"
+) -> Tuple[jax.Array, Any]:
+    b = token.shape[0]
+    x = L.apply_embedding(p["dec"]["embed"], token)
+    x = x + sinusoid(1, cfg.d_model, offset=0).astype(x.dtype)[None]  # pos via rope-free add
+    pos = position[:, None]
+    h_, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    grp = h_ // hkv
+
+    def body(x, inp):
+        lp, ct = inp
+        h = L.apply_norm(lp["norm1"], x)
+        y, self_c = A.gqa_decode(lp["self_attn"], h, pos, ct["self"], cfg, backend=backend)
+        x = x + y
+        # cross attention against cached enc K/V
+        h = L.apply_norm(lp["norm2"], x)
+        q = L.apply_linear(lp["cross_attn"]["wq"], h, backend=backend).reshape(
+            b, hkv, grp, dh
+        )
+        sc = jnp.einsum(
+            "bhgd,bshd->bhgs", q.astype(jnp.float32), ct["xk"].astype(jnp.float32)
+        ) * dh**-0.5
+        attn = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", attn, ct["xv"].astype(jnp.float32))
+        o = L.apply_linear(
+            lp["cross_attn"]["wo"], o.reshape(b, 1, h_ * dh).astype(x.dtype),
+            backend=backend,
+        )
+        x = x + o
+        h = L.apply_norm(lp["norm3"], x)
+        x = x + M.apply_mlp(lp["mlp"], h, backend=backend)
+        return x, dict(ct, self=self_c)
+
+    x, layers = jax.lax.scan(body, x, (p["dec"]["layers"], cache["layers"]))
+    x = L.apply_norm(p["dec"]["final_norm"], x)
+    logits = L.logits_from_embedding(p["dec"]["embed"], x)[:, 0]
+    return logits, {"layers": layers}

@@ -1,0 +1,63 @@
+"""Sharding hints usable from model code without hard mesh coupling.
+
+Model code calls ``shard_hint(x, "data", None, "model", None)``; if a mesh
+has been installed (the pjit launchers do it), this becomes
+``with_sharding_constraint`` — anchoring GSPMD's layout propagation at the
+spots where it otherwise picks replicate-and-gather (e.g. around sequential
+scans).  With no mesh installed (CPU unit tests), it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("hint_mesh", default=None)
+
+
+@contextlib.contextmanager
+def hint_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def shard_hint(x: jax.Array, *axes) -> jax.Array:
+    """Constrain x to PartitionSpec(*axes) if a hint mesh is installed.
+
+    Axis entries that don't divide the corresponding dim are dropped
+    (replicated) so hints are always safe.
+    """
+    mesh = _MESH.get()
+    if mesh is None or os.environ.get("REPRO_NO_HINTS"):
+        return x
+    sizes = dict(mesh.shape)
+    fixed = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            fixed.append(None)
+            continue
+        group = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                      if a in sizes)  # drop axes absent from this mesh
+        if not group:
+            fixed.append(None)
+            continue
+        n = 1
+        for a in group:
+            n *= sizes[a]
+        fixed.append((group if len(group) > 1 else group[0])
+                     if dim % n == 0 else None)
+    fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed))
+    )

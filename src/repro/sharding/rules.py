@@ -1,0 +1,306 @@
+"""Logical-axis sharding rules: param/batch/cache PartitionSpec trees.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Pods are pure data-parallel (lowest pressure on the slower
+inter-pod links); "model" carries TP/EP.
+
+Parallelism mapping (see DESIGN.md §5):
+  TP   attention heads / FFN hidden / per-head SSM channels → "model"
+  EP   MoE experts → "model" (sort-based dispatch shards the [E, C, D] bufs)
+  DP   batch → ("pod", "data")
+  SP   decode KV caches: sequence axis → "model" (+ "data" when batch==1,
+       the long-context cell) — softmax over a sharded axis lowers to a
+       max/sum all-reduce pair, the GSPMD flash-decode pattern
+  ZeRO optimizer state: extra "data" sharding over the largest divisible dim
+
+Rules are matched by parameter path suffix.  Quantized weights (packed /
+scales / zeros) inherit the fp weight's spec; scales/zeros keep only the
+output-axis sharding because the group axis (Ci/G) is rarely divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DATA = "data"
+MODEL = "model"
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
+
+
+def _path_str(path) -> str:
+    toks = []
+    for k in path:
+        if hasattr(k, "key"):
+            toks.append(str(k.key))
+        elif hasattr(k, "name"):
+            toks.append(str(k.name))
+        else:
+            toks.append(str(getattr(k, "idx", k)))
+    return "/".join(toks)
+
+
+# (suffix, base spec for the LAST ndim dims of an fp weight)
+# order matters: first match wins
+_RULES = (
+    ("embed/table", P(MODEL, None)),
+    ("lm_head/w", P(None, MODEL)),
+    # attention (+ rwkv time-mix shares the names)
+    ("mixer/wq/w", P(None, MODEL)), ("mixer/wk/w", P(None, MODEL)),
+    ("mixer/wv/w", P(None, MODEL)), ("mixer/wg/w", P(None, MODEL)),
+    ("mixer/wo/w", P(MODEL, None)),
+    ("self_attn/wq/w", P(None, MODEL)), ("self_attn/wk/w", P(None, MODEL)),
+    ("self_attn/wv/w", P(None, MODEL)), ("self_attn/wo/w", P(MODEL, None)),
+    ("cross_attn/wq/w", P(None, MODEL)), ("cross_attn/wk/w", P(None, MODEL)),
+    ("cross_attn/wv/w", P(None, MODEL)), ("cross_attn/wo/w", P(MODEL, None)),
+    ("mixer/wq/b", P(MODEL)), ("mixer/wk/b", P(MODEL)), ("mixer/wv/b", P(MODEL)),
+    ("self_attn/wq/b", P(MODEL)), ("self_attn/wk/b", P(MODEL)), ("self_attn/wv/b", P(MODEL)),
+    ("cross_attn/wq/b", P(MODEL)), ("cross_attn/wk/b", P(MODEL)), ("cross_attn/wv/b", P(MODEL)),
+    ("wo/b", P(None)),
+    # MLA
+    ("mixer/wq_a/w", P(None, None)), ("mixer/wkv_a/w", P(None, None)),
+    ("mixer/wq_b/w", P(None, MODEL)), ("mixer/wkv_b/w", P(None, MODEL)),
+    # MoE
+    ("experts/gate", P(MODEL, None, None)), ("experts/up", P(MODEL, None, None)),
+    ("experts/down", P(MODEL, None, None)),
+    ("router/w", P(None, None)),
+    # dense MLP / shared expert
+    ("mlp/gate/w", P(None, MODEL)), ("mlp/up/w", P(None, MODEL)),
+    ("mlp/down/w", P(MODEL, None)),
+    ("shared/gate/w", P(None, MODEL)), ("shared/up/w", P(None, MODEL)),
+    ("shared/down/w", P(MODEL, None)),
+    ("gate/b", P(MODEL)), ("up/b", P(MODEL)), ("down/b", P(None)),
+    # rwkv channel mix (under mlp/)
+    ("mlp/wk/w", P(None, MODEL)), ("mlp/wv/w", P(MODEL, None)),
+    ("mlp/wr/w", P(None, MODEL)),
+    # mamba2
+    ("mixer/in_z/w", P(None, MODEL)), ("mixer/in_x/w", P(None, MODEL)),
+    ("mixer/in_bc/w", P(None, None)), ("mixer/in_dt/w", P(None, MODEL)),
+    ("conv_x_w", P(None, MODEL)), ("conv_x_b", P(MODEL)),
+    ("conv_bc_w", P(None, None)), ("conv_bc_b", P(None)),
+    ("dt_bias", P(MODEL)), ("a_log", P(MODEL)), ("d_skip", P(MODEL)),
+    ("mixer/norm/scale", P(MODEL)),
+    ("mixer/out_proj/w", P(MODEL, None)),
+    # rwkv specific
+    ("w_lora_a", P(None, None)), ("w_lora_b", P(None, MODEL)),
+    ("w0", P(MODEL)), ("u_bonus", P(MODEL)),
+    ("ln_x/scale", P(MODEL)), ("ln_x/bias", P(MODEL)),
+    ("mixer/mix", P(None, None)), ("mlp/mix", P(None, None)),
+)
+
+
+def _match(ps: str) -> Optional[P]:
+    for suffix, spec in _RULES:
+        if ps.endswith(suffix):
+            return spec
+    return None
+
+
+def _pad_lead(spec: P, ndim: int, qfield: Optional[str] = None) -> P:
+    """Prepend None for stacked layer dims; adapt for quantized fields."""
+    base = tuple(spec)
+    if qfield in ("scales", "zeros"):
+        # group axis rarely divisible → keep only output-axis sharding
+        base = (None, base[1] if len(base) > 1 else None)
+    lead = ndim - len(base)
+    if lead < 0:  # spec longer than leaf ndim (e.g. bias under moe) — trim
+        base = base[-ndim:]
+        lead = 0
+    return P(*([None] * lead + list(base)))
+
+
+def _divisible(shape, spec: P, mesh) -> bool:
+    sizes = dict(mesh.shape)
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        need = int(np.prod([sizes[a] for a in axs]))
+        if dim % need != 0:
+            return False
+    return True
+
+
+_KV_NAMES = ("wk/w", "wv/w", "wk/b", "wv/b")
+
+
+def param_specs(params_shape, mesh, cfg: Optional[ModelConfig] = None) -> Any:
+    """PartitionSpec tree for a param (shape/val) tree.
+
+    Falls back to replication when a matched spec doesn't divide the dims.
+    KV projections are REPLICATED when num_kv_heads doesn't divide the model
+    axis: col-sharding them would split head_dim across devices and put a
+    giant score all-reduce inside every attention layer (MaxText does the
+    same for small-KV GQA under wide TP).  RWKV's "wk/wv" share the names but
+    are attention-free — their columns are per-head channels, so the rule
+    only fires for attention mixers.
+    """
+    sizes = dict(mesh.shape)
+    repl_kv = (
+        cfg is not None
+        and cfg.mixer in ("attention", "mla")
+        and cfg.num_kv_heads % sizes[MODEL] != 0
+    )
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        qfield = None
+        if ps.endswith("/packed") or ps.endswith("/scales") or ps.endswith("/zeros"):
+            qfield = ps.rsplit("/", 1)[1]
+            ps = ps.rsplit("/", 1)[0]
+        if repl_kv and any(ps.endswith(k) for k in _KV_NAMES) and "mlp/" not in ps:
+            return P()
+        spec = _match(ps)
+        if spec is None:
+            return P()  # norms, small vectors → replicated
+        spec = _pad_lead(spec, ndim, qfield)
+        if not _divisible(leaf.shape, spec, mesh):
+            return P()
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+# ----------------------------------------------------------------- batch ----
+def batch_specs(batch_shape: Dict[str, Any], mesh) -> Dict[str, Any]:
+    """Shard every batch input along its leading (batch) dim when divisible."""
+    dp = batch_axes(mesh)
+    n_dp = int(np.prod([dict(mesh.shape)[a] for a in dp]))
+
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.shape else 0
+        if leaf.ndim >= 1 and b % n_dp == 0 and b > 0:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+# ----------------------------------------------------------------- cache ----
+def cache_specs_tree(cache_shape, mesh) -> Any:
+    """Decode-cache specs: batch → data axes; sequence → model (SP); SSM
+    state heads/channels → model.  Long-context batch=1 shards the sequence
+    over every axis."""
+    sizes = dict(mesh.shape)
+    dp = batch_axes(mesh)
+    n_dp = int(np.prod([sizes[a] for a in dp]))
+    n_model = sizes[MODEL]
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        shp = leaf.shape
+        name = ps.rsplit("/", 1)[1]
+        lead = len(shp) - _cache_rank(name)
+        b_idx = lead  # batch dim position after stacked-layer dims
+        if name == "lens":
+            return P(*([None] * lead), dp if shp[b_idx] % n_dp == 0 else None)
+        if name in ("k", "v", "ckv", "kpe", "xk", "xv", "k_s", "v_s"):
+            # [*, B, S, ...]: shard B over data, S over model (SP decode)
+            b, s = shp[b_idx], shp[b_idx + 1]
+            if b % n_dp == 0:
+                baxis, saxis = dp, (MODEL,) if s % n_model == 0 else None
+            else:
+                baxis = None
+                all_ax = dp + (MODEL,)
+                n_all = n_dp * n_model
+                saxis = all_ax if s % n_all == 0 else (
+                    (MODEL,) if s % n_model == 0 else None)
+            rest = len(shp) - b_idx - 2
+            return P(*([None] * lead), baxis, saxis, *([None] * rest))
+        if name in ("h",):      # mamba [*, B, H, P, N]
+            b, h = shp[b_idx], shp[b_idx + 1]
+            return P(*([None] * lead),
+                     dp if b % n_dp == 0 else None,
+                     MODEL if h % n_model == 0 else None,
+                     *([None] * (len(shp) - b_idx - 2)))
+        if name in ("wkv",):    # rwkv [*, B, H, K, V]
+            b, h = shp[b_idx], shp[b_idx + 1]
+            return P(*([None] * lead),
+                     dp if b % n_dp == 0 else None,
+                     MODEL if h % n_model == 0 else None,
+                     *([None] * (len(shp) - b_idx - 2)))
+        if name in ("conv_x",):  # [*, B, K-1, d_inner]
+            b, _, c = shp[b_idx], shp[b_idx + 1], shp[b_idx + 2]
+            return P(*([None] * lead),
+                     dp if b % n_dp == 0 else None, None,
+                     MODEL if c % n_model == 0 else None)
+        # conv_bc, x_prev, ffn_prev: batch only
+        b = shp[b_idx] if len(shp) > b_idx else 0
+        rest = len(shp) - b_idx - 1
+        return P(*([None] * lead),
+                 dp if b and b % n_dp == 0 else None, *([None] * rest))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def _cache_rank(name: str) -> int:
+    """Rank of one cache leaf EXCLUDING stacked layer dims."""
+    return {
+        "k": 4, "v": 4, "xk": 4, "xv": 4, "ckv": 3, "kpe": 3, "lens": 1,
+        "k_s": 3, "v_s": 3,
+        "h": 4, "conv_x": 3, "conv_bc": 3, "wkv": 4, "x_prev": 2,
+        "ffn_prev": 2,
+    }[name]
+
+
+def logits_spec(mesh) -> P:
+    return P(batch_axes(mesh), None, MODEL)
+
+
+def logits_prefill_spec(mesh, batch: int, vocab: int) -> P:
+    """Prefill returns last-token logits [B, V]: batch over data, V over model."""
+    sizes = dict(mesh.shape)
+    dp = batch_axes(mesh)
+    n_dp = int(np.prod([sizes[a] for a in dp]))
+    b_ax = dp if batch % n_dp == 0 else None
+    v_ax = MODEL if vocab % sizes[MODEL] == 0 else None
+    return P(b_ax, v_ax)
+
+
+def logits_decode_spec(mesh, batch: int, vocab: int) -> P:
+    sizes = dict(mesh.shape)
+    v_ax = MODEL if vocab % sizes[MODEL] == 0 else None
+    return P(None, v_ax)  # decode batch may be small (long_500k B=1)
+
+
+# ------------------------------------------------------ optimizer (ZeRO) ----
+def opt_specs(opt_shape, pspecs, mesh) -> Any:
+    """ZeRO-style optimizer-state sharding: mu/nu/ef take the param's spec
+    PLUS a "data" sharding on the first dim whose axis is free and divisible
+    — so Adam moments never replicate across the data axis (123B × 8 bytes of
+    moments would otherwise live on every data replica)."""
+    sizes = dict(mesh.shape)
+    n_data = sizes[DATA]
+
+    def zeroify(spec: P, shape) -> P:
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(axes, shape)):
+            if ax is None and dim % n_data == 0 and dim > 0:
+                axes[i] = DATA
+                return P(*axes)
+        return P(*axes)
+
+    import dataclasses as _dc
+
+    mu = jax.tree.map(
+        lambda sp, leaf: zeroify(sp, leaf.shape), pspecs, opt_shape.mu
+    )
+    nu = jax.tree.map(
+        lambda sp, leaf: zeroify(sp, leaf.shape), pspecs, opt_shape.nu
+    )
+    ef = None
+    if opt_shape.ef is not None:
+        ef = jax.tree.map(
+            lambda sp, leaf: zeroify(sp, leaf.shape), pspecs, opt_shape.ef
+        )
+    from repro.optim.adamw import OptState
+
+    return OptState(step=P(), mu=mu, nu=nu, ef=ef)

@@ -1,0 +1,62 @@
+"""Train-step factory: loss → grad → (optional microbatch accumulation) →
+AdamW, with activation remat on the layer scan.  Pure function of
+(params, opt_state, batch) so it jits/pjits cleanly."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import api
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig, backend: str = "auto"):
+    remat = tc.remat != "none"
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, cfg, backend=backend, remat=remat)
+
+    return loss_fn
+
+
+def _split_microbatches(batch, n: int):
+    return [jax.tree.map(lambda a: a[i::n], batch) for i in range(n)]
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, backend: str = "auto"):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+    loss_fn = make_loss_fn(cfg, tc, backend)
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatch and tc.microbatch > 1:
+            n = tc.microbatch
+            mbs = _split_microbatches(batch, n)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, grad_acc, grads
+                )
+                return (loss_acc + loss / n, grad_acc), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zero),
+                jax.tree.map(lambda *xs: jnp.stack(xs), *mbs),
+            )
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, metrics = adamw.adamw_update(
+            params, grads, opt_state, tc
+        )
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step

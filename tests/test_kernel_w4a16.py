@@ -1,0 +1,89 @@
+"""Pallas W4A16 kernel vs pure-jnp oracle: shape/dtype sweep + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+from repro.kernels import ops
+from repro.kernels.ref import w4a16_matmul_ref
+from repro.kernels.w4a16_matmul import w4a16_matmul, vmem_bytes
+
+
+def _mk(t, ci, co, g, seed=0, dtype=jnp.float32):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (t, ci), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (ci, co), jnp.float32)
+    return x, q.quantize(w, group_size=g)
+
+
+@pytest.mark.parametrize(
+    "t,ci,co,g",
+    [
+        (8, 128, 128, 128),
+        (16, 256, 128, 128),
+        (128, 256, 256, 128),
+        (64, 256, 512, 64),
+        (1, 128, 256, 128),   # decode row
+        (300, 384, 256, 128), # t not multiple of block
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref_sweep(t, ci, co, g, dtype):
+    x, qt = _mk(t, ci, co, g, dtype=dtype)
+    got = w4a16_matmul(x, qt, block_t=128, block_co=128, interpret=True)
+    want = w4a16_matmul_ref(x, qt)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=2e-1 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_kernel_batched_input_shape():
+    x, qt = _mk(4 * 16, 128, 128, 128, seed=2)
+    x3 = x.reshape(4, 16, 128)
+    got = w4a16_matmul(x3, qt, block_t=64, block_co=128, interpret=True)
+    assert got.shape == (4, 16, 128)
+    want = w4a16_matmul_ref(x3, qt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_ops_dispatch_xla_equals_interpret():
+    x, qt = _mk(32, 256, 128, 128, seed=3)
+    a = ops.w4a16_matmul(x, qt, backend="xla")
+    b = ops.w4a16_matmul(x, qt, backend="interpret", block_t=32, block_co=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+def test_quantized_linear_bias():
+    x, qt = _mk(8, 128, 128, 128, seed=4)
+    b = jnp.arange(128, dtype=jnp.float32)
+    y = ops.quantized_linear(x, qt, b, backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(w4a16_matmul_ref(x, qt) + b), rtol=1e-6
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(1, 64),
+    ci_groups=st.integers(1, 3),
+    co_tiles=st.integers(1, 3),
+    g=st.sampled_from([64, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_property_kernel_allclose(t, ci_groups, co_tiles, g, seed):
+    ci, co = ci_groups * g, co_tiles * 128
+    x, qt = _mk(t, ci, co, g, seed=seed)
+    got = w4a16_matmul(x, qt, block_t=64, block_co=128, interpret=True)
+    want = w4a16_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_vmem_budget_default_blocks():
+    # default block shapes must fit comfortably in 16MB v5e VMEM
+    assert vmem_bytes(256, 256, 128) < 4 * 1024 * 1024

@@ -1,0 +1,113 @@
+"""Property tests for the MoE sort-based dispatch (the §Perf-rewritten path).
+
+Invariants:
+- every kept token-slot lands in the buffer row of ITS expert;
+- per-expert occupancy never exceeds capacity;
+- with dropless capacity the MoE equals the dense per-token expert sum;
+- the block-local (hierarchical) dispatch equals the global one when
+  capacity is dropless.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.mlp import _dispatch_indices, apply_moe, init_moe
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 200),
+    e=st.sampled_from([2, 4, 8]),
+    cap=st.integers(1, 64),
+    seed=st.integers(0, 10_000),
+)
+def test_dispatch_indices_invariants(n, e, cap, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, e, n).astype(np.int32))
+    buf_idx, keep = _dispatch_indices(ids, e, cap)
+    buf_idx, keep = np.asarray(buf_idx), np.asarray(keep)
+    # kept slots land inside their expert's capacity range
+    experts = buf_idx // cap
+    assert (experts[keep] == np.asarray(ids)[keep]).all()
+    # no two kept slots share a buffer row
+    rows = buf_idx[keep]
+    assert len(np.unique(rows)) == len(rows)
+    # occupancy ≤ capacity, and nothing is dropped while space remains
+    counts = np.bincount(np.asarray(ids), minlength=e)
+    kept_per_e = np.bincount(np.asarray(ids)[keep], minlength=e)
+    np.testing.assert_array_equal(kept_per_e, np.minimum(counts, cap))
+
+
+def _moe_cfg(e=4, k=2, cf=None):
+    return ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=4, d_ff=16, vocab_size=64, dtype="float32",
+        moe=MoEConfig(num_experts=e, top_k=k, d_expert=16,
+                      capacity_factor=cf if cf is not None else float(e)),
+    )
+
+
+def _dense_reference(p, x, cfg):
+    """Every token through its top-k experts, no capacity — ground truth."""
+    m = cfg.moe
+    b, t, d = x.shape
+    xf = x.reshape(-1, d).astype(jnp.float32)
+    logits = xf @ p["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    gate = p["experts"]["gate"].astype(jnp.float32)
+    up = p["experts"]["up"].astype(jnp.float32)
+    down = p["experts"]["down"].astype(jnp.float32)
+    # per-token dense evaluation of all experts, then select
+    h = jax.nn.silu(jnp.einsum("nd,edf->nef", xf, gate)) * jnp.einsum(
+        "nd,edf->nef", xf, up)
+    y_all = jnp.einsum("nef,efd->ned", h, down)
+    sel = jnp.take_along_axis(y_all, idx[..., None], axis=1)
+    return (sel * w[..., None]).sum(1).reshape(b, t, d)
+
+
+def test_moe_matches_dense_reference_dropless():
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    got, _ = apply_moe(p, x, cfg, backend="xla")
+    want = _dense_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_bounded():
+    """With tight capacity the output degrades gracefully (dropped tokens
+    produce zero expert contribution, never garbage)."""
+    cfg = _moe_cfg(cf=0.5)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    got, aux = apply_moe(p, x, cfg, backend="xla")
+    assert bool(jnp.isfinite(got).all()) and bool(jnp.isfinite(aux))
+    dense = _dense_reference(p, x, cfg)
+    # dropped-token rows are a subset: error bounded by dense magnitude
+    assert float(jnp.linalg.norm(got)) <= float(jnp.linalg.norm(dense)) * 1.5
+
+
+def test_hierarchical_dispatch_equals_global_dropless(monkeypatch):
+    """Block-local dispatch (the §Perf path) == global when dropless."""
+    from repro.models import mlp as mlp_mod
+    from repro.sharding import hints
+
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
+    base, _ = apply_moe(p, x, cfg, backend="xla")
+
+    class FakeMesh:  # just enough for nblk selection; constraints stubbed
+        shape = {"data": 2, "model": 1}
+
+    monkeypatch.setattr(mlp_mod.H, "current_mesh", lambda: FakeMesh())
+    monkeypatch.setattr(mlp_mod.H, "shard_hint", lambda a, *ax: a)
+    blocked, _ = apply_moe(p, x, cfg, backend="xla")
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,103 @@
+"""Serving engine: continuous batching, slot reuse, quantized path, output
+consistency with raw greedy decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import QuantConfig
+from repro.core import calibration as C
+from repro.core.apply import smoothquant_plus
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("codellama-7b", smoke=True)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, n, lens=(5, 9, 7, 12), max_tokens=6):
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(2, cfg.vocab_size, size=lens[i % len(lens)]).astype(np.int32),
+                max_tokens=max_tokens)
+        for i in range(n)
+    ]
+
+
+def test_engine_completes_all_requests(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=3, max_seq=40, backend="xla")
+    for r in _reqs(cfg, 7):
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.completed == 7
+    assert stats.decoded_tokens > 0
+
+
+def test_continuous_batching_overlaps(setup):
+    """More requests than slots must still finish, reusing freed slots."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=2, max_seq=40, backend="xla")
+    reqs = _reqs(cfg, 5, max_tokens=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(len(r.output) >= 1 for r in reqs)
+    assert all(r.done_t is not None for r in reqs)
+
+
+def test_engine_greedy_matches_reference_decode(setup):
+    """Engine (greedy) must reproduce a hand-rolled prefill+decode loop."""
+    cfg, params = setup
+    prompt = np.arange(3, 11).astype(np.int32)
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=32, backend="xla")
+    req = Request(uid=0, prompt=prompt, max_tokens=4, temperature=0.0)
+    eng.submit(req)
+    eng.run_until_drained()
+
+    # reference: single-request prefill + greedy decode
+    logits, cache = api.prefill_fn(
+        params, {"tokens": jnp.asarray(prompt)[None]}, cfg, 32, backend="xla")
+    out = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(3):
+        lg, cache = api.decode_fn(
+            params,
+            {"token": jnp.asarray([[out[-1]]], jnp.int32),
+             "position": jnp.asarray([pos], jnp.int32)},
+            cache, cfg, backend="xla")
+        out.append(int(jnp.argmax(lg, -1)[0]))
+        pos += 1
+    assert req.output == out
+
+
+def test_quantized_engine_serves(setup):
+    cfg0, params = setup
+    cfg = cfg0.with_(dtype="float32")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    batches = C.synthetic_calibration_set(cfg, n_seqs=1, seq_len=16)
+    qparams, rep = smoothquant_plus(
+        params, cfg, batches, QuantConfig(group_size=32), step=0.5)
+    eng = ServingEngine(qparams, cfg, batch_size=2, max_seq=32, backend="xla")
+    for r in _reqs(cfg, 3, max_tokens=4):
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.completed == 3
+
+
+def test_latency_metadata_recorded(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=2, max_seq=32, backend="xla")
+    reqs = _reqs(cfg, 2, max_tokens=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    for r in reqs:
+        assert r.first_token_t is not None and r.done_t is not None
+        assert r.done_t >= r.first_token_t >= r.arrival_t

@@ -1,0 +1,155 @@
+"""Optimizer, trainer, data pipeline, checkpoint manager, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import api
+from repro.optim import adamw
+from repro.train.trainer import make_train_step
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("codellama-7b", smoke=True)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _data(cfg, batch=4, seq=32):
+    return SyntheticTokens(DataConfig(
+        seed=1, vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch))
+
+
+def test_loss_decreases_over_steps(small):
+    cfg, params = small
+    tc = TrainConfig(learning_rate=3e-3, total_steps=30, warmup_steps=3)
+    step = jax.jit(make_train_step(cfg, tc, backend="xla"))
+    opt = adamw.init_opt_state(params, tc)
+    data = _data(cfg)
+    losses = []
+    for i in range(30):
+        params, opt, m = step(params, opt, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_microbatched_matches_full_batch_grads(small):
+    cfg, params = small
+    tc_full = TrainConfig(learning_rate=1e-3, microbatch=None)
+    tc_micro = TrainConfig(learning_rate=1e-3, microbatch=2)
+    data = _data(cfg)
+    b = data.batch_at(0)
+    p1, _, m1 = jax.jit(make_train_step(cfg, tc_full, "xla"))(
+        params, adamw.init_opt_state(params, tc_full), b)
+    p2, _, m2 = jax.jit(make_train_step(cfg, tc_micro, "xla"))(
+        params, adamw.init_opt_state(params, tc_micro), b)
+    # same data, averaged grads → parameters should match closely
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-2
+
+
+def test_grad_compression_error_feedback(small):
+    cfg, params = small
+    tc = TrainConfig(learning_rate=3e-3, grad_compression="int8_ef",
+                     total_steps=20, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, tc, backend="xla"))
+    opt = adamw.init_opt_state(params, tc)
+    assert opt.ef is not None
+    data = _data(cfg)
+    losses = []
+    for i in range(20):
+        params, opt, m = step(params, opt, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])  # still trains
+
+
+def test_compress_int8_roundtrip_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+    q, amax = adamw.compress_int8(g)
+    d = adamw.decompress_int8(q, amax)
+    assert float(jnp.max(jnp.abs(d - g))) <= float(amax) / 127 + 1e-6
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.lr_schedule(tc, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] < 0.2 and max(lrs) <= 1.0 and lrs[-1] < lrs[2]
+
+
+# ------------------------------------------------------------- data pipe ----
+def test_data_pipeline_deterministic_and_resumable():
+    dc = DataConfig(seed=7, vocab_size=1000, seq_len=64, global_batch=4)
+    d1, d2 = SyntheticTokens(dc), SyntheticTokens(dc)
+    b1 = d1.batch_at(123)
+    b2 = d2.batch_at(123)       # fresh instance, same step → identical
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    it = d1.iterate(start_step=5)
+    np.testing.assert_array_equal(next(it)["tokens"], d2.batch_at(5)["tokens"])
+
+
+def test_data_pipeline_labels_shifted():
+    dc = DataConfig(seed=0, vocab_size=50, seq_len=16, global_batch=2)
+    b = SyntheticTokens(dc).batch_at(0)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+
+# ------------------------------------------------------------ checkpoints ---
+def test_checkpoint_atomic_roundtrip(tmp_path, small):
+    cfg, params = small
+    tc = TrainConfig()
+    opt = adamw.init_opt_state(params, tc)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(10, (params, opt), {"loss": 1.0})
+    mgr.save(20, (params, opt), {"loss": 0.5})
+    mgr.save(30, (params, opt), {"loss": 0.4})
+    assert mgr.all_steps() == [20, 30]  # retention
+    (p2, o2), meta = mgr.restore((params, opt))
+    assert meta["step"] == 30
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path, small):
+    cfg, params = small
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, params)
+    # simulate a crash mid-write: tmp dir left behind
+    bad = tmp_path / "step_00000009.tmp"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")
+    # and a directory without meta (incomplete rename target — not possible
+    # with atomic rename, but be paranoid)
+    half = tmp_path / "step_00000007"
+    half.mkdir()
+    assert mgr.latest_step() == 5
+    _, meta = mgr.restore(params)
+    assert meta["step"] == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, small):
+    cfg, params = small
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((8, 8))})
+
+
+def test_elastic_restore_re_layout(tmp_path, small):
+    """Restore with explicit shardings (elastic re-mesh path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg, params = small
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.arange(16.0).reshape(4, 4)})
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P())}
+    tree, _ = mgr.restore({"w": jnp.zeros((4, 4))}, shardings=sh)
+    assert tree["w"].sharding == sh["w"]
