@@ -28,6 +28,12 @@ from repro.core.quantize import QuantizedTensor
 DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_CO = 256
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this version ships
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
 
 def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
     k = pl.program_id(2)
@@ -108,7 +114,7 @@ def w4a16_matmul(
         out_specs=pl.BlockSpec((bt, bco), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t_pad, co), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bco), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

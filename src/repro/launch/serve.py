@@ -31,6 +31,12 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=50.0, help="req/s (Poisson)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--group-size", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV cache page size (tokens)")
+    ap.add_argument("--prefill-mode", choices=("bucketed", "slotwise"),
+                    default="bucketed")
+    ap.add_argument("--max-prefill-tokens", type=int, default=None,
+                    help="padded-token budget per engine step (chunked prefill)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -49,7 +55,10 @@ def main(argv=None):
               f"in {time.time()-t0:.1f}s")
 
     eng = ServingEngine(params, cfg, batch_size=args.batch_size,
-                        max_seq=args.max_seq, backend="xla")
+                        max_seq=args.max_seq, backend="xla",
+                        page_size=args.page_size,
+                        prefill_mode=args.prefill_mode,
+                        max_prefill_tokens=args.max_prefill_tokens)
     rng = np.random.default_rng(0)
     arrive = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [Request(uid=i,

@@ -67,11 +67,14 @@ def forward_fn(params, batch, cfg: ModelConfig, *, backend: str = "auto"):
 
 
 def prefill_fn(params, batch, cfg: ModelConfig, smax: int, *,
-               backend: str = "auto"):
+               backend: str = "auto", last_idx=None, raw_cache: bool = False):
     if cfg.encdec:
+        if last_idx is not None or raw_cache:
+            raise NotImplementedError("bucketed/raw prefill is decoder-only")
         return W.whisper_prefill(params, batch["frames"], batch["tokens"], cfg,
                                  smax, backend=backend)
     return LM.lm_prefill(params, batch["tokens"], cfg, smax, backend=backend,
+                         last_idx=last_idx, raw_cache=raw_cache,
                          **_lm_kw(batch))
 
 
@@ -88,6 +91,26 @@ def init_decode_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int = 0)
     if cfg.encdec:
         return W.init_whisper_cache(cfg, batch, smax, enc_len or smax)
     return LM.init_cache(cfg, batch, smax)
+
+
+# ---------------------------------------------------------- paged serving ---
+def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Whether the paged serving cache covers this config (reason if not)."""
+    return LM.paged_supported(cfg)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Per-layer KV pools ``[L, num_pages, page_size, ...]`` for the serving
+    engine's block-table pager (``repro.serving.kv_cache``)."""
+    return LM.init_paged_cache(cfg, num_pages, page_size)
+
+
+def decode_paged_fn(params, batch, cache, table_rows, cfg: ModelConfig, *,
+                    backend: str = "auto"):
+    """One decode step against paged pools; ``table_rows[B, P]`` maps each
+    slot's logical pages to pool pages."""
+    return LM.lm_decode_paged(params, batch["token"], cache, batch["position"],
+                              table_rows, cfg, backend=backend)
 
 
 # --------------------------------------------------------------- dry-run ----

@@ -159,6 +159,17 @@ def gqa_prefill(
     return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
 
 
+def _attend_rows(qh, k_rows, v_rows, valid, scale):
+    """One-token attention of ``qh[B,Hkv,grp,Dh]`` against gathered rows
+    ``k/v[B,S,Hkv,D*]`` with validity mask ``valid[B,S]``."""
+    sc = jnp.einsum(
+        "bhgd,bshd->bhgs", qh.astype(jnp.float32), k_rows.astype(jnp.float32)
+    ) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", pattn, v_rows.astype(jnp.float32))
+
+
 def gqa_decode(
     p, x, positions, cache: Dict[str, jax.Array], cfg: ModelConfig, *, backend: str = "auto"
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -199,12 +210,7 @@ def gqa_decode(
     else:
         k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
         v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
-        sc = jnp.einsum(
-            "bhgd,bshd->bhgs", qh.astype(jnp.float32), k_cache.astype(jnp.float32)
-        ) * scale
-        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
-        pattn = jax.nn.softmax(sc, axis=-1)
-        out = jnp.einsum("bhgs,bshd->bhgd", pattn, v_cache.astype(jnp.float32))
+        out = _attend_rows(qh, k_cache, v_cache, valid, scale)
         new_cache = {"k": k_cache, "v": v_cache, "lens": lens + 1}
     y = L.apply_linear(
         p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
@@ -229,6 +235,59 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Arr
         "v": jnp.zeros((batch, smax, hkv, dh), cfg.jdtype),
         "lens": jnp.zeros((batch,), jnp.int32),
     }
+
+
+def gather_pages(pool: jax.Array, table_rows: jax.Array) -> jax.Array:
+    """``pool[NP, PS, ...]`` + page table ``table_rows[B, P]`` →
+    ``[B, P*PS, ...]`` rows in logical-position order.  The single gather
+    shared by every paged decode path (and re-exported by
+    ``serving.kv_cache`` for the pager tests)."""
+    g = pool[table_rows]
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def gqa_decode_paged(
+    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    write_pos: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against a *paged* pool.
+
+    ``pool``: ``{"k"/"v": [num_pages, page_size, Hkv, Dh]}`` shared across
+    slots; ``table_rows[B, P]`` maps each slot's logical pages to pool pages
+    (unused entries point at the trash page); ``write_pos[B]`` is the logical
+    position the new token lands at.  Rows are gathered back into logical
+    order, so the math is identical to :func:`gqa_decode` on a contiguous
+    ``[B, P*page_size]`` cache.
+    """
+    b, t, _ = x.shape
+    assert t == 1, "decode processes one token"
+    if cfg.kv_quant:
+        raise NotImplementedError("paged decode does not support kv_quant yet")
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    q, k, v = _qkv(p, x, positions, cfg, backend)
+    page_size = pool["k"].shape[1]
+    bidx = jnp.arange(b)
+    pg = table_rows[bidx, write_pos // page_size]           # [B] pool page ids
+    off = write_pos % page_size
+    # distinct slots own distinct pages → scatter indices collide only for
+    # idle slots, whose table rows all point at the trash page
+    k_pool = pool["k"].at[pg, off].set(k[:, 0])
+    v_pool = pool["v"].at[pg, off].set(v[:, 0])
+    k_rows = gather_pages(k_pool, table_rows)               # [B, P*PS, Hkv, Dh]
+    v_rows = gather_pages(v_pool, table_rows)
+    valid = jnp.arange(k_rows.shape[1])[None, :] <= write_pos[:, None]
+    qh = q.reshape(b, hkv, h // hkv, dh)
+    out = _attend_rows(qh, k_rows, v_rows, valid, dh ** -0.5)
+    y = L.apply_linear(
+        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
+    )
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def init_gqa_page_pool(cfg: ModelConfig, num_pages: int, page_size: int):
+    hkv, dh = cfg.num_kv_heads, cfg.hdim
+    shp = (num_pages, page_size, hkv, dh)
+    return {"k": jnp.zeros(shp, cfg.jdtype), "v": jnp.zeros(shp, cfg.jdtype)}
 
 
 def _kv_quantize(x: jax.Array):
@@ -312,26 +371,15 @@ def mla_prefill(
     return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
 
 
-def mla_decode(
-    p, x, positions, cache, cfg: ModelConfig, *, backend: str = "auto"
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Absorbed-form decode: attention runs in the latent space, so the cache
-    stays compressed ([B,S,r] instead of [B,S,H,Dh]) — MLA's entire point."""
+def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
+                         backend: str):
+    """Absorbed-form latent attention of a single query token against gathered
+    latent rows ``ckv[B,S,r]`` / ``kpe[B,S,dr]`` with mask ``valid[B,S]``."""
     m = cfg.mla
-    b, t, _ = x.shape
-    assert t == 1
+    b = q_nope.shape[0]
     h = cfg.num_heads
     from repro.core.quantize import QuantizedTensor
     from repro.core.quantize import dequantize as _deq
-
-    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)    # [B,1,H,*]
-    ckv_new, kpe_new = _mla_latent(p, x, positions, cfg, backend)
-    lens = cache["lens"]
-    bidx = jnp.arange(b)
-    ckv = cache["ckv"].at[bidx, lens].set(ckv_new[:, 0])
-    kpe = cache["kpe"].at[bidx, lens].set(kpe_new[:, 0])
-    smax = ckv.shape[1]
-    valid = jnp.arange(smax)[None, :] <= lens[:, None]
 
     wkv_b = p["wkv_b"]["w"]
     if isinstance(wkv_b, QuantizedTensor):
@@ -355,10 +403,60 @@ def mla_decode(
     attn = jax.nn.softmax(sc, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", attn, ckv.astype(jnp.float32))
     out = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
-    y = L.apply_linear(
-        p["wo"], out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype), backend=backend
-    )
+    return out.reshape(b, 1, h * m.v_head_dim)
+
+
+def mla_decode(
+    p, x, positions, cache, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-form decode: attention runs in the latent space, so the cache
+    stays compressed ([B,S,r] instead of [B,S,H,Dh]) — MLA's entire point."""
+    b, t, _ = x.shape
+    assert t == 1
+    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)    # [B,1,H,*]
+    ckv_new, kpe_new = _mla_latent(p, x, positions, cfg, backend)
+    lens = cache["lens"]
+    bidx = jnp.arange(b)
+    ckv = cache["ckv"].at[bidx, lens].set(ckv_new[:, 0])
+    kpe = cache["kpe"].at[bidx, lens].set(kpe_new[:, 0])
+    smax = ckv.shape[1]
+    valid = jnp.arange(smax)[None, :] <= lens[:, None]
+    out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg, backend)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
     return y, {"ckv": ckv, "kpe": kpe, "lens": lens + 1}
+
+
+def mla_decode_paged(
+    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    write_pos: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-form decode against a paged latent pool
+    (``{"ckv": [NP,PS,r], "kpe": [NP,PS,dr]}``); see :func:`gqa_decode_paged`
+    for the page-table convention."""
+    b, t, _ = x.shape
+    assert t == 1
+    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
+    ckv_new, kpe_new = _mla_latent(p, x, positions, cfg, backend)
+    page_size = pool["ckv"].shape[1]
+    bidx = jnp.arange(b)
+    pg = table_rows[bidx, write_pos // page_size]
+    off = write_pos % page_size
+    ckv_pool = pool["ckv"].at[pg, off].set(ckv_new[:, 0])
+    kpe_pool = pool["kpe"].at[pg, off].set(kpe_new[:, 0])
+    ckv = gather_pages(ckv_pool, table_rows)
+    kpe = gather_pages(kpe_pool, table_rows)
+    valid = jnp.arange(ckv.shape[1])[None, :] <= write_pos[:, None]
+    out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg, backend)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
+    return y, {"ckv": ckv_pool, "kpe": kpe_pool}
+
+
+def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((num_pages, page_size, m.kv_lora_rank), cfg.jdtype),
+        "kpe": jnp.zeros((num_pages, page_size, m.qk_rope_head_dim), cfg.jdtype),
+    }
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Array]:

@@ -163,6 +163,30 @@ def _block_decode(p, x, positions, cache, cfg, *, mixer=None, backend="auto"):
     return x, cache
 
 
+def _block_decode_paged(p, x, rope_pos, write_pos, pool, table_rows, cfg,
+                        *, backend="auto"):
+    """Attention-mixer block decode against a paged KV pool (see
+    ``models/attention.py`` for the page-table convention)."""
+    h = L.apply_norm(p["norm1"], x)
+    if cfg.mixer == "attention":
+        y, pool = A.gqa_decode_paged(
+            p["mixer"], h, rope_pos, pool, table_rows, write_pos, cfg,
+            backend=backend)
+    elif cfg.mixer == "mla":
+        y, pool = A.mla_decode_paged(
+            p["mixer"], h, rope_pos, pool, table_rows, write_pos, cfg,
+            backend=backend)
+    else:
+        raise ValueError(f"paged decode needs an attention mixer, got {cfg.mixer}")
+    x = x + y
+    h2 = L.apply_norm(p["norm2"], x)
+    if cfg.moe is not None:
+        y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
+    else:
+        y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+    return x + y2, pool
+
+
 # ------------------------------------------------------------- LM wiring ----
 def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
     k = cfg.hybrid.attn_every
@@ -341,6 +365,61 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int) -> Any:
     return {"layers": stackn(lambda: one_ssm(cfg.mixer), cfg.num_layers)}
 
 
+def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Whether the paged serving cache covers this config."""
+    if cfg.encdec:
+        return False, "enc-dec (whisper) decode is not paged"
+    if cfg.family == "hybrid":
+        return False, "hybrid stacks mix O(1) SSM state with shared-attn KV"
+    if cfg.mixer not in ("attention", "mla"):
+        return False, f"{cfg.mixer} state is O(1) per slot; paging buys nothing"
+    if cfg.kv_quant:
+        return False, "int8 KV pools not implemented for the paged path yet"
+    return True, ""
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
+    """Per-layer paged KV pools (stacked over layers, shared across slots)."""
+    ok, why = paged_supported(cfg)
+    if not ok:
+        raise NotImplementedError(why)
+    mk = (
+        (lambda: A.init_mla_page_pool(cfg, num_pages, page_size))
+        if cfg.mixer == "mla"
+        else (lambda: A.init_gqa_page_pool(cfg, num_pages, page_size))
+    )
+    return {"layers": jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[mk() for _ in range(cfg.num_layers)])}
+
+
+def lm_decode_paged(
+    p: Params,
+    token: jax.Array,             # [B, 1] int32
+    cache: Any,                   # pools from init_paged_cache
+    position: jax.Array,          # [B] int32 current position
+    table_rows: jax.Array,        # [B, P] int32 page table
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Any]:
+    """One decode step against paged KV pools.  Returns (logits, new pools)."""
+    b = token.shape[0]
+    pos = position[:, None]
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(position[None, :, None], (3, b, 1))
+    x = L.apply_embedding(p["embed"], token)
+
+    def step(x, inp):
+        lp, st = inp
+        x, st = _block_decode_paged(
+            lp, x, pos, position, st, table_rows, cfg, backend=backend)
+        return x, st
+
+    x, nst = jax.lax.scan(step, x, (p["layers"], cache["layers"]))
+    logits = _lm_head(p, x, cfg, backend)[:, 0]
+    return logits, {"layers": nst}
+
+
 def lm_decode(
     p: Params,
     token: jax.Array,             # [B, 1] int32
@@ -403,6 +482,8 @@ def lm_prefill(
     positions=None,
     embeds=None,
     backend: str = "auto",
+    last_idx=None,
+    raw_cache: bool = False,
 ) -> Tuple[jax.Array, Any]:
     """Process a prompt, building a decode cache padded to ``smax``.
 
@@ -410,11 +491,27 @@ def lm_prefill(
     into the preallocated cache; SSM/hybrid archs replay the prompt through
     the recurrent decode path chunk-free (their state is O(1)).
     Returns (last-token logits [B,V], cache).
+
+    ``last_idx[B]``: per-row index of the real last prompt token — logits are
+    gathered there instead of at ``[:, -1]``, so right-padded rows of a
+    length-bucketed joint prefill sample from the correct position (causal
+    masking already keeps padding out of the valid prefix's KV).
+    ``raw_cache=True`` skips the ``smax`` slab: the returned attention caches
+    are the raw prefix KV ``[L, B, T, ...]``, ready to be scattered into
+    paged pools (no per-request slab allocation).
     """
     b, t = tokens.shape[:2]
+    if (last_idx is not None or raw_cache) and cfg.family == "hybrid":
+        raise NotImplementedError("bucketed/raw prefill not wired for hybrid")
     pos = _default_positions(cfg, b, t, positions)
-    cache = init_cache(cfg, b, smax)
+    cache = None if raw_cache else init_cache(cfg, b, smax)
     x = _embed_in(p, tokens, cfg, embeds)
+
+    def head_at(x):
+        if last_idx is None:
+            return _lm_head(p, x, cfg, backend)[:, -1]
+        x_last = x[jnp.arange(b), last_idx][:, None]       # [B, 1, D]
+        return _lm_head(p, x_last, cfg, backend)[:, 0]
 
     def pad_kv(ct, new):
         """Write freshly-built prefix cache into the smax-padded slab."""
@@ -457,6 +554,14 @@ def lm_prefill(
         logits = _lm_head(p, x, cfg, backend)[:, -1]
         return logits, {"groups": ngr, "shared": nsh, "tail": ntail}
 
+    if raw_cache:
+        def body_raw(x, lp):
+            x, new = _block_prefill_cache(lp, x, pos, cfg, backend=backend)
+            return x, new
+
+        x, layers_cache = jax.lax.scan(body_raw, x, p["layers"])
+        return head_at(x), {"layers": layers_cache}
+
     def body(x, inp):
         lp, ct = inp
         x, new = _block_prefill_cache(lp, x, pos, cfg, backend=backend)
@@ -465,5 +570,4 @@ def lm_prefill(
         return x, new
 
     x, layers_cache = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
-    logits = _lm_head(p, x, cfg, backend)[:, -1]
-    return logits, {"layers": layers_cache}
+    return head_at(x), {"layers": layers_cache}

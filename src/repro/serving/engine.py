@@ -1,25 +1,28 @@
-"""Continuous-batching serving engine (the vLLM role, JAX-native).
+"""Continuous-batching serving engine with paged KV (the vLLM role, JAX-native).
 
 Implements the paper's deployment story: an FP16/bf16 checkpoint is handed
 in, SmoothQuant+ PTQ runs once (quantize-on-load), and requests are served
-from a fixed-slot continuous batcher:
+from a fixed-slot continuous batcher backed by a **paged KV cache**:
 
-- ``batch_size`` slots, each backed by a row of the decode cache;
-- arriving requests are prefilled one slot at a time (their prompt KV is
-  written into the slot's rows) and join the in-flight decode batch;
-- every engine step decodes ONE token for all active slots (W4A16 matmuls);
-- finished slots (eos / max_tokens) free immediately and are refilled from
-  the queue — no head-of-line blocking, the continuous-batching win.
-
-Slot-wise prefill keeps the engine simple (one compiled decode step + one
-compiled single-slot prefill); chunked joint prefill is a perf extension.
+- the decode cache is a pool of fixed-size pages shared by all slots
+  (``serving/kv_cache.py``); a host-side pager hands pages to requests on
+  admission and reclaims them on finish, so cache memory tracks live tokens;
+- arriving requests are admitted *in batches*: the scheduler
+  (``serving/scheduler.py``) groups the runnable queue prefix into length
+  buckets and each bucket prefills **jointly** — one compiled ``[n, blen]``
+  trace per bucket instead of one B=1 trace per request — and the raw prefix
+  KV is scattered straight into the pages (no per-slot cache merging);
+- every engine step decodes ONE token for all active slots against the
+  gathered pages (W4A16 matmuls), sampling **per-slot** temperatures;
+- finished slots free their pages immediately and are refilled from the
+  queue — no head-of-line blocking, the continuous-batching win.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +30,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import api
-from repro.serving.sampling import sample
+from repro.serving import kv_cache as KV
+from repro.serving.sampling import sample_per_slot
+from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -49,6 +54,7 @@ class EngineStats:
     prefilled_tokens: int = 0
     steps: int = 0
     completed: int = 0
+    prefill_batches: int = 0      # joint prefill launches (≤ admitted reqs)
 
 
 class ServingEngine:
@@ -59,97 +65,107 @@ class ServingEngine:
         *,
         batch_size: int = 8,
         max_seq: int = 256,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
         eos_id: int = 1,
         backend: str = "auto",
         seed: int = 0,
+        max_prefill_tokens: Optional[int] = None,
+        prefill_mode: str = "bucketed",
     ):
+        ok, why = api.paged_supported(cfg)
+        if not ok:
+            raise NotImplementedError(f"paged serving: {why}")
         self.cfg = cfg
         self.params = params
         self.B = batch_size
-        self.S = max_seq
+        self.PS = page_size
+        self.P = -(-max_seq // page_size)          # pages per slot
+        self.S = self.P * page_size                # max_seq rounded to pages
         self.eos = eos_id
         self.backend = backend
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = api.init_decode_cache(cfg, batch_size, max_seq)
+        # +1: page 0 is the pager's trash page, never handed to a slot
+        num_pages = num_pages or (batch_size * self.P + 1)
+        if num_pages - 1 < self.P:
+            # one max-size request must always be admittable once the pool
+            # drains, or run_until_drained could spin on an empty batch
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold one max_seq request "
+                f"({self.P} pages of {page_size} tokens + trash page)")
+        self.pager = KV.PagePool(num_pages, page_size, batch_size, self.P)
+        self.pools = api.init_paged_cache(cfg, num_pages, page_size)
+        self.sched = Scheduler(page_size=page_size, max_seq=self.S,
+                               max_prefill_tokens=max_prefill_tokens,
+                               mode=prefill_mode)
+
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.pos = np.zeros(batch_size, np.int32)      # next position per slot
         self.last_tok = np.zeros(batch_size, np.int32)
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
 
+        # donate the pools: the step's output cache aliases the input buffers
+        # instead of allocating a second full pool every decoded token
         self._decode = jax.jit(
-            lambda p, c, tok, pos: api.decode_fn(
-                p, {"token": tok, "position": pos}, c, cfg, backend=backend
-            )
+            lambda p, c, tok, pos, table: api.decode_paged_fn(
+                p, {"token": tok, "position": pos}, c, table, cfg,
+                backend=backend
+            ),
+            donate_argnums=(1,),
         )
-        # single-slot prefill (B=1), merged into the big cache afterwards
+        # joint length-bucketed prefill: raw prefix KV + per-row last logits.
+        # jit re-specializes per (n, bucket_len); the scheduler's power-of-two
+        # buckets keep that trace count O(log max_seq).
         self._prefill = jax.jit(
-            lambda p, toks: api.prefill_fn(
-                p, {"tokens": toks}, cfg, max_seq, backend=backend
+            lambda p, toks, last_idx: api.prefill_fn(
+                p, {"tokens": toks}, cfg, self.S, backend=backend,
+                last_idx=last_idx, raw_cache=True
             )
         )
+        self._sample = jax.jit(sample_per_slot)
 
     # ------------------------------------------------------------- admin ---
     def submit(self, req: Request):
+        if len(req.prompt) > self.S - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds max_seq-1={self.S - 1}")
         req.arrival_t = req.arrival_t or time.perf_counter()
         self.queue.append(req)
 
-    def _merge_slot_cache(self, slot: int, one_cache):
-        """Copy a freshly prefilled B=1 cache into row ``slot``."""
-        def merge(big, one):
-            if big.ndim == one.ndim and big.shape[-one.ndim:] == one.shape[-one.ndim:]:
-                pass
-            # batch dim position: find the axis where big == B and one == 1
-            return big.at[..., slot:slot + 1, :, :, :][...].set(one) \
-                if False else big
-
-        # do it explicitly per leaf kind (batch axis position is rank-defined)
-        flat_big = jax.tree_util.tree_flatten_with_path(self.cache)[0]
-        flat_one = {tuple(str(getattr(k, "key", getattr(k, "idx", k)))
-                          for k in path): leaf
-                    for path, leaf in
-                    jax.tree_util.tree_flatten_with_path(one_cache)[0]}
-        new_leaves = {}
-        for path, big in flat_big:
-            key = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
-            one = flat_one[key]
-            # batch axis = first axis where big is B and one is 1
-            ax = next(
-                i for i, (bd, od) in enumerate(zip(big.shape, one.shape))
-                if bd == self.B and od == 1
-            )
-            idx = [slice(None)] * big.ndim
-            idx[ax] = slice(slot, slot + 1)
-            new_leaves[key] = big.at[tuple(idx)].set(one.astype(big.dtype))
-
-        def rebuild(path_tree):
-            # reconstruct tree with same structure
-            leaves, treedef = jax.tree_util.tree_flatten(self.cache)
-            ordered = [new_leaves[tuple(
-                str(getattr(k, "key", getattr(k, "idx", k))) for k in path
-            )] for path, _ in flat_big]
-            return jax.tree_util.tree_unflatten(treedef, ordered)
-
-        self.cache = rebuild(None)
-
     def _admit(self):
-        for slot in range(self.B):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, one_cache = self._prefill(self.params, toks)
-            self._merge_slot_cache(slot, one_cache)
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        for bkt in self.sched.plan(self.queue, free, self.pager):
+            n, blen = len(bkt.reqs), bkt.pad_len
+            toks = np.zeros((n, blen), np.int32)
+            lens = np.empty(n, np.int32)
+            for r, req in enumerate(bkt.reqs):
+                lens[r] = len(req.prompt)
+                toks[r, : lens[r]] = req.prompt
+            logits, raw = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
+            raw = {"layers": {k: v for k, v in raw["layers"].items()
+                              if k != "lens"}}
+            rows = self.pager.table()[bkt.slots]           # [n, P]
+            page, off = KV.prefix_write_plan(lens, rows, self.PS, blen)
+            self.pools = KV.write_prefix(
+                self.pools, raw, jnp.asarray(page), jnp.asarray(off))
             self.key, sk = jax.random.split(self.key)
-            first = int(sample(logits, sk, temperature=req.temperature)[0])
-            req.output.append(first)
-            req.first_token_t = time.perf_counter()
-            self.slots[slot] = req
-            self.pos[slot] = len(req.prompt)
-            self.last_tok[slot] = first
-            self.stats.prefilled_tokens += len(req.prompt)
+            temps = jnp.asarray([r.temperature for r in bkt.reqs], jnp.float32)
+            firsts = np.asarray(self._sample(logits, sk, temps))
+            now = time.perf_counter()
+            for r, (slot, req) in enumerate(zip(bkt.slots, bkt.reqs)):
+                first = int(firsts[r])
+                req.output.append(first)
+                req.first_token_t = now
+                self.slots[slot] = req
+                self.pos[slot] = lens[r]
+                self.last_tok[slot] = first
+                self.stats.prefilled_tokens += int(lens[r])
+            self.stats.prefill_batches += 1
 
     # -------------------------------------------------------------- step ---
     def step(self) -> int:
@@ -161,15 +177,14 @@ class ServingEngine:
             return 0
         tok = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        table = jnp.asarray(self.pager.table())
+        logits, self.pools = self._decode(self.params, self.pools, tok, pos, table)
         self.key, sk = jax.random.split(self.key)
-        temps = np.array([
+        temps = jnp.asarray([
             self.slots[i].temperature if self.slots[i] else 0.0
             for i in range(self.B)
-        ])
-        nxt = np.asarray(sample(logits, sk, temperature=float(temps.max())))
-        greedy = np.asarray(jnp.argmax(logits, -1))
-        nxt = np.where(temps > 0, nxt, greedy).astype(np.int32)
+        ], jnp.float32)
+        nxt = np.asarray(self._sample(logits, sk, temps))
         self.stats.steps += 1
         for i in active:
             req = self.slots[i]
@@ -185,6 +200,9 @@ class ServingEngine:
                 req.done_t = time.perf_counter()
                 self.stats.completed += 1
                 self.slots[i] = None   # slot freed → continuous batching
+                self.pos[i] = 0
+                self.last_tok[i] = 0
+                self.pager.free_slot(i)
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:

@@ -1,0 +1,136 @@
+"""Paged KV cache: fixed-size pages + per-slot page tables (the vLLM idea).
+
+The decode cache is a single device-resident *pool* per layer —
+``k[num_pages, page_size, Hkv, Dh]`` — instead of one contiguous
+``[B, Smax, ...]`` slab.  A host-side :class:`PagePool` hands out pages to
+slots on admission and reclaims them when a request finishes, so cache memory
+scales with *live tokens*, not ``batch_size × max_seq``.
+
+Logical position ``t`` of slot ``s`` lives at
+``pool[table[s, t // page_size], t % page_size]``.
+
+Page 0 is reserved as a **trash page**: every unused page-table entry points
+at it, so idle slot rows in the batched decode step scatter their garbage
+writes somewhere harmless and gathers from idle slots read masked-out data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PagePool:
+    """Host-side page allocator over the device pools.
+
+    Invariants (checked by :meth:`check_invariants`):
+      - the trash page (page 0) is never allocated;
+      - a page is owned by at most one slot;
+      - ``free ∪ allocated == {1, .., num_pages-1}`` at all times.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, batch_size: int,
+                 max_pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        if page_size < 1 or max_pages_per_slot < 1:
+            raise ValueError("page_size/max_pages_per_slot must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.batch_size = batch_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._slot_pages: List[List[int]] = [[] for _ in range(batch_size)]
+        self._table = np.full((batch_size, max_pages_per_slot), TRASH_PAGE,
+                              np.int32)
+
+    # ------------------------------------------------------------- queries --
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.page_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slot_pages[slot])
+
+    def table(self) -> np.ndarray:
+        """[B, max_pages_per_slot] int32 page ids (trash-padded)."""
+        return self._table
+
+    # ------------------------------------------------------- alloc / free ---
+    def alloc(self, slot: int, n: int) -> List[int]:
+        """Give ``slot`` ``n`` pages.  The slot must currently own none."""
+        if self._slot_pages[slot]:
+            raise RuntimeError(f"slot {slot} already owns pages")
+        if n > self.max_pages_per_slot:
+            raise ValueError(
+                f"request needs {n} pages > max_pages_per_slot="
+                f"{self.max_pages_per_slot}")
+        if n > len(self._free):
+            raise RuntimeError(f"out of pages: need {n}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._slot_pages[slot] = pages
+        self._table[slot, :n] = pages
+        return pages
+
+    def free_slot(self, slot: int) -> None:
+        self._free.extend(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._table[slot, :] = TRASH_PAGE
+
+    def check_invariants(self) -> None:
+        allocated = [p for sp in self._slot_pages for p in sp]
+        assert TRASH_PAGE not in allocated, "trash page was allocated"
+        assert TRASH_PAGE not in self._free, "trash page in free list"
+        assert len(set(allocated)) == len(allocated), "page double-owned"
+        assert sorted(allocated + self._free) == list(
+            range(1, self.num_pages)), "page leak / invention"
+        live = self._table[self._table != TRASH_PAGE].tolist()
+        assert sorted(live) == sorted(allocated), "table out of sync"
+
+
+# ------------------------------------------------------- device-side ops ----
+def prefix_write_plan(lens: np.ndarray, table_rows: np.ndarray,
+                      page_size: int, pad_len: int):
+    """Destination (page, offset) for each (row, t) of a padded prefill.
+
+    ``lens[n]`` are true prompt lengths, ``table_rows[n, P]`` the page-table
+    rows of the slots the prompts land in.  Padding positions (``t >= len``)
+    are routed to the trash page.  Returns int32 ``(page[n, T], off[n, T])``.
+    """
+    n = len(lens)
+    t_idx = np.arange(pad_len)[None, :]
+    mask = t_idx < np.asarray(lens)[:, None]
+    slot_pg = np.minimum(t_idx // page_size, table_rows.shape[1] - 1)
+    page = np.where(mask, table_rows[np.arange(n)[:, None], slot_pg], TRASH_PAGE)
+    off = np.broadcast_to(t_idx % page_size, (n, pad_len))
+    return page.astype(np.int32), off.astype(np.int32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_prefix(pools: Any, kv: Any, page: jax.Array, off: jax.Array) -> Any:
+    """Scatter raw prefix KV into the pools.
+
+    ``pools`` leaves are ``[L, num_pages, page_size, ...]``; ``kv`` leaves are
+    the matching raw prefill caches ``[L, n, T, ...]``; ``page``/``off`` are
+    ``[n, T]`` from :func:`prefix_write_plan`.
+    """
+    def put(pool, new):
+        return pool.at[:, page, off].set(new.astype(pool.dtype))
+
+    return jax.tree.map(put, pools, kv)
+
+
+# canonical page gather lives next to the attention decode paths that
+# consume it; re-exported here so pager users/tests need only this module
+from repro.models.attention import gather_pages  # noqa: E402,F401

@@ -5,6 +5,21 @@ import jax
 import jax.numpy as jnp
 
 
+def _filter_top_k_top_p(logits: jax.Array, top_k: int, top_p: float) -> jax.Array:
+    """Mask logits outside the top-k / nucleus-p set with -inf."""
+    if top_k and top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p < 1.0:
+        srt = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return logits
+
+
 def sample(
     logits: jax.Array,          # [B, V] f32
     key: jax.Array,
@@ -16,15 +31,29 @@ def sample(
     """Temperature / top-k / top-p sampling.  temperature<=0 → greedy."""
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / temperature
-    if top_k and top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    if top_p < 1.0:
-        srt = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(srt, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
-        cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+    logits = _filter_top_k_top_p(logits.astype(jnp.float32) / temperature,
+                                 top_k, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_per_slot(
+    logits: jax.Array,          # [B, V]
+    key: jax.Array,
+    temperatures: jax.Array,    # [B] f32; rows with t<=0 decode greedily
+    *,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jax.Array:
+    """Vectorized sampling with a *per-row* temperature.
+
+    One batched call serves mixed greedy/stochastic requests: row ``b`` is
+    ``argmax`` when ``temperatures[b] <= 0`` and a categorical draw at its own
+    temperature otherwise (the seed engine wrongly applied the batch-max
+    temperature to every slot).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.where(temperatures > 0, temperatures, 1.0).astype(jnp.float32)
+    scaled = _filter_top_k_top_p(logits.astype(jnp.float32) / t[:, None],
+                                 top_k, top_p)
+    stoch = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0, stoch, greedy)

@@ -1,0 +1,88 @@
+"""Admission scheduler: length-bucketed batched prefill planning.
+
+The seed engine prefilled one request at a time (one compiled B=1 trace per
+prompt length).  This scheduler instead admits *every* runnable queued
+request in one engine step and groups them into **length buckets** (powers of
+two of the page size), so each bucket compiles one joint ``[n, bucket_len]``
+prefill and the number of distinct traces stays O(log max_seq) instead of
+O(#prompt lengths).
+
+Admission is strict FCFS: the queue head is admitted only if a free slot and
+enough free pages exist; nothing behind it jumps ahead (no starvation).  A
+``max_prefill_tokens`` budget bounds the padded tokens prefilled in a single
+engine step — oversized backlogs are drained in chunks across steps so decode
+latency of in-flight requests stays bounded.
+
+``mode="slotwise"`` degenerates to one request per bucket at its exact prompt
+length — the seed engine's prefill strategy — kept as the benchmark baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serving.kv_cache import PagePool
+
+
+@dataclasses.dataclass
+class PrefillBucket:
+    pad_len: int          # joint prefill length (tokens)
+    reqs: list            # admitted Requests, FCFS order
+    slots: List[int]      # slot id per request
+    needs: List[int]      # pages reserved per request
+
+
+class Scheduler:
+    def __init__(self, *, page_size: int, max_seq: int,
+                 max_prefill_tokens: Optional[int] = None,
+                 mode: str = "bucketed"):
+        if mode not in ("bucketed", "slotwise"):
+            raise ValueError(f"unknown prefill mode {mode!r}")
+        self.page_size = page_size
+        self.max_seq = max_seq
+        self.max_prefill_tokens = max_prefill_tokens
+        self.mode = mode
+
+    def bucket_len(self, prompt_len: int) -> int:
+        b = self.page_size
+        while b < prompt_len:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def pages_needed(self, req, pool: PagePool) -> int:
+        want = min(len(req.prompt) + req.max_tokens, self.max_seq)
+        return pool.pages_needed(want)
+
+    def plan(self, queue: Deque, free_slots: List[int],
+             pool: PagePool) -> List[PrefillBucket]:
+        """Pop admissible requests off ``queue`` and bucket them.
+
+        Reserves pages in ``pool`` for every admitted request (so a later
+        bucket in the same step can't oversubscribe) and assigns slots.
+        """
+        slots = deque(free_slots)
+        budget = self.max_prefill_tokens
+        buckets: dict[int, PrefillBucket] = {}
+        spent = 0
+        while queue and slots:
+            req = queue[0]
+            need = self.pages_needed(req, pool)
+            if not pool.can_alloc(need):
+                break                       # FCFS: head blocks the line
+            blen = (len(req.prompt) if self.mode == "slotwise"
+                    else self.bucket_len(len(req.prompt)))
+            if budget is not None and spent and spent + blen > budget:
+                break                       # chunk the backlog across steps
+            queue.popleft()
+            slot = slots.popleft()
+            pool.alloc(slot, need)
+            key = blen if self.mode == "bucketed" else (blen, slot)
+            bkt = buckets.get(key)
+            if bkt is None:
+                bkt = buckets[key] = PrefillBucket(blen, [], [], [])
+            bkt.reqs.append(req)
+            bkt.slots.append(slot)
+            bkt.needs.append(need)
+            spent += blen
+        return list(buckets.values())

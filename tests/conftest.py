@@ -1,0 +1,95 @@
+"""Tier-1 test harness glue.
+
+Three jobs, all so ``python -m pytest -x -q`` works on a clean machine:
+
+1. put ``src/`` on ``sys.path`` (no install / PYTHONPATH needed);
+2. if ``hypothesis`` is not installed, register a shim module so the four
+   property-test modules still *collect*; their ``@given`` tests turn into
+   skips while every plain test in those modules keeps running
+   (install ``requirements-dev.txt`` to run the property tests too);
+3. a dependency-free per-test timeout (SIGALRM) so a wedged test fails loudly
+   instead of hanging the suite — tune via ``REPRO_TEST_TIMEOUT`` (seconds,
+   0 disables; CI adds a job-level timeout on top).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import sys
+import types
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+
+# ------------------------------------------------- hypothesis fallback shim --
+def _install_hypothesis_shim() -> None:
+    class _AnyStrategy:
+        """Opaque stand-in: any attribute/call/combinator returns itself."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def stub():
+                pytest.skip("hypothesis not installed; property test skipped")
+
+            # plain function with NO parameters: pytest must not try to
+            # resolve the strategy arguments as fixtures (and no
+            # functools.wraps — __wrapped__ would leak the real signature)
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            stub.__module__ = fn.__module__
+            return stub
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.__getattr__ = lambda name: _AnyStrategy()
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = _AnyStrategy()
+    hyp.assume = lambda *a, **k: True
+    hyp.__is_repro_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_shim()
+
+
+# --------------------------------------------------- per-test hang guard ----
+DEFAULT_TIMEOUT_S = 300
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    timeout = int(os.environ.get("REPRO_TEST_TIMEOUT", str(DEFAULT_TIMEOUT_S)))
+    if timeout <= 0 or not hasattr(signal, "SIGALRM"):
+        return (yield)
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded {timeout}s (REPRO_TEST_TIMEOUT to adjust)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(timeout)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

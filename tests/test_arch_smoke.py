@@ -104,6 +104,7 @@ def test_decode_consistent_with_forward(arch):
     )
 
 
+@pytest.mark.slow  # ~20s: replays the prompt token-by-token through 2 caches
 def test_kv8_decode_close_to_bf16():
     """int8 KV cache (beyond-paper) must track the full-precision decode."""
     cfg = get_config("codellama-7b", smoke=True).with_(dtype="float32")

@@ -1,0 +1,99 @@
+"""Deterministic (hypothesis-free) coverage of the quantization core: the
+pack/unpack group-split layout, the RTN quantize→dequantize error bound, the
+fake-quantize consistency, and the Pallas W4A16 kernel in interpret mode vs
+the XLA dequant reference.  Guards eq. 1 of the paper on a clean machine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as q
+from repro.kernels import ops
+
+
+def _rand_w(ci, co, seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (ci, co), jnp.float32) * scale
+
+
+@pytest.mark.parametrize("ci,co,g", [(64, 32, 64), (128, 64, 128),
+                                     (256, 32, 64), (256, 128, 128)])
+def test_pack_unpack_group_split_roundtrip(ci, co, g):
+    codes = jax.random.randint(jax.random.PRNGKey(1), (ci, co), 0, 16, jnp.uint8)
+    packed = q.pack_codes(codes, g)
+    assert packed.shape == (ci // 2, co) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(q.unpack_codes(packed, g), codes)
+
+
+def test_pack_layout_is_group_split():
+    """Within a group of G rows, packed row r holds code[g*G+r] in the low
+    nibble and code[g*G+G/2+r] in the high nibble (the TPU-kernel contract)."""
+    g = 8
+    codes = (jnp.arange(16, dtype=jnp.uint8) % 16)[:, None]     # [16, 1], 2 groups
+    packed = np.asarray(q.pack_codes(codes, g))
+    for grp in range(2):
+        for r in range(g // 2):
+            lo = int(codes[grp * g + r, 0])
+            hi = int(codes[grp * g + g // 2 + r, 0])
+            assert packed[grp * (g // 2) + r, 0] == (lo | (hi << 4))
+
+
+@pytest.mark.parametrize("g", [32, 64, 128])
+def test_quant_dequant_error_bounded_by_half_step(g):
+    w = _rand_w(256, 64)
+    w_hat = q.dequantize(q.quantize(w, group_size=g), jnp.float32)
+    wf = np.asarray(w).reshape(256 // g, g, 64)
+    step = (wf.max(1) - wf.min(1)) / 15.0
+    err = np.abs(np.asarray(w_hat).reshape(256 // g, g, 64) - wf)
+    assert (err <= step[:, None, :] * 0.5 + 1e-6).all()
+
+
+def test_dequant_quant_matches_fake_quantize():
+    w = _rand_w(256, 48, seed=3)
+    via_qt = q.dequantize(q.quantize(w, group_size=64), jnp.float32)
+    np.testing.assert_allclose(np.asarray(via_qt),
+                               np.asarray(q.fake_quantize(w, 64)),
+                               rtol=0, atol=1e-6)
+
+
+def test_constant_groups_use_scale_fallback():
+    # constant group → zero range → scale falls back to 1; the round-trip
+    # then reduces to round(), i.e. error ≤ 0.5 instead of NaN/inf
+    w = jnp.full((64, 8), 0.37, jnp.float32)
+    w_hat = np.asarray(q.dequantize(q.quantize(w, 64), jnp.float32))
+    assert np.isfinite(w_hat).all()
+    assert (np.abs(w_hat - 0.37) <= 0.5).all()
+    # all-zero weights survive exactly
+    z = jnp.zeros((64, 8), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(q.dequantize(q.quantize(z, 64), jnp.float32)), 0.0)
+
+
+def test_quantized_tensor_metadata():
+    w = _rand_w(256, 64)
+    qt = q.quantize(w, group_size=64)
+    assert qt.shape == (256, 64)
+    assert qt.group_size == 64
+    # int4 + per-group f32 scales/zeros ≈ 8x smaller than f32
+    assert qt.nbytes_quant() < w.size * 4 / 4
+
+
+@pytest.mark.parametrize("t,ci,co,g", [(8, 128, 128, 64), (16, 128, 256, 128)])
+def test_w4a16_interpret_matches_xla_reference(t, ci, co, g):
+    """Pallas kernel body (interpret mode, CPU) vs the XLA dequant-matmul."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (t, ci), jnp.float32)
+    qt = q.quantize(jax.random.normal(kw, (ci, co), jnp.float32), group_size=g)
+    ref = ops.w4a16_matmul(x, qt, backend="xla")
+    got = ops.w4a16_matmul(x, qt, backend="interpret", block_t=8, block_co=co)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_w4a16_xla_equals_explicit_dequant_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 128), jnp.float32)
+    qt = q.quantize(_rand_w(128, 64, seed=5), group_size=64)
+    ref = x @ q.dequantize(qt, jnp.float32)
+    got = ops.w4a16_matmul(x, qt, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
