@@ -180,6 +180,88 @@ def bench_paged_vs_slotwise_prefill(quick=False):
     return rows
 
 
+def bench_paged_decode(quick=False):
+    """Tentpole benchmark: paged decode attention, jnp dense gather vs the
+    Pallas fused page-gather kernel, fp16 vs int8 pools.  Reports decode
+    tokens/s (gather path timed compiled; the kernel runs interpreted on CPU,
+    so its wall time is not meaningful off-TPU and is labeled as such) and
+    the analytic KV bytes each impl moves per step.  Results also land in
+    ``BENCH_paged_decode.json`` so the perf trajectory is tracked across PRs.
+    """
+    import json
+
+    from repro.kernels.paged_attention import paged_kv_bytes_per_step
+    from repro.models import attention as A
+    from repro.serving import kv_cache as KV
+
+    rows, results = [], []
+    b, ps, pages = (2, 8, 2) if quick else (4, 8, 4)
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(0)
+    lens = rng.integers(ps, pages * ps, size=b)
+    wp = jnp.asarray(lens - 1, jnp.int32)
+
+    for kvq in (False, True):
+        cfg, _ = CM.outlier_model("codellama-7b")
+        cfg = cfg.with_(kv_quant=kvq)
+        p = A.init_gqa(jax.random.PRNGKey(0), cfg)
+        pool_host = KV.PagePool(1 + b * pages, ps, b, pages)
+        for s in range(b):
+            pool_host.alloc(s, pages)
+        table = jnp.asarray(pool_host.table())
+        pool = A.init_gqa_page_pool(cfg, 1 + b * pages, ps)
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model),
+                              cfg.jdtype)
+        hkv, dh = cfg.num_kv_heads, cfg.hdim
+        el = 1 if kvq else np.dtype(cfg.jdtype).itemsize
+        row_bytes = 2 * hkv * dh * el + (2 * hkv * 4 if kvq else 0)  # K+V(+s)
+
+        for impl in ("gather", "pallas_interpret" if not on_tpu else "pallas"):
+            icfg = cfg.with_(paged_attn_impl=impl)
+            fn = jax.jit(lambda x, pool, table, wp, icfg=icfg: A.gqa_decode_paged(
+                p, x, wp[:, None], pool, table, wp, icfg, backend="xla")[0])
+            us, _ = CM.timed(fn, x, pool, table, wp)
+            kbytes = paged_kv_bytes_per_step(
+                lens, pages, ps, row_bytes,
+                "gather" if impl == "gather" else "pallas")
+            tps = b / (us * 1e-6)
+            timed_ok = impl == "gather" or on_tpu
+            tag = f"paged_decode/{'int8' if kvq else 'fp'}/{impl}"
+            rows.append((tag, us,
+                         f"tok_per_s={tps:.1f};kv_bytes_per_step={kbytes}"
+                         + ("" if timed_ok else ";interpret_untimed")))
+            results.append({
+                "impl": impl, "kv_quant": kvq, "us_per_step": us,
+                "tokens_per_s": tps, "kv_bytes_per_step": kbytes,
+                "wall_time_meaningful": timed_ok,
+            })
+
+    def _bytes(kvq, kernel):
+        return next(r["kv_bytes_per_step"] for r in results
+                    if r["kv_quant"] == kvq and (r["impl"] != "gather") == kernel)
+
+    ratios = {
+        f"bytes_ratio_gather_over_kernel_{'int8' if kvq else 'fp'}":
+            _bytes(kvq, False) / _bytes(kvq, True)
+        for kvq in (False, True)
+    }
+    payload = {
+        "suite": "paged_decode",
+        "config": {"batch": int(b), "page_size": int(ps),
+                   "pages_per_slot": int(pages),
+                   "lens": [int(v) for v in lens],
+                   "backend": jax.default_backend()},
+        "results": results,
+        **{k: float(v) for k, v in ratios.items()},
+    }
+    with open("BENCH_paged_decode.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    for k, v in ratios.items():
+        rows.append((f"paged_decode/{k}", 0.0, f"ratio={v:.2f}x"))
+    rows.append(("paged_decode/json", 0.0, "wrote=BENCH_paged_decode.json"))
+    return rows
+
+
 def bench_kernel_w4a16(quick=False):
     """§2.3 kernel: XLA dequant-matmul path vs fp matmul (CPU proxy) + the
     analytic VMEM claim of the Pallas TPU kernel."""
@@ -221,6 +303,7 @@ ALL = [
     bench_fig3_layer_loss,
     bench_fig7_throughput_latency,
     bench_paged_vs_slotwise_prefill,
+    bench_paged_decode,
     bench_kernel_w4a16,
 ]
 
@@ -228,12 +311,16 @@ ALL = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run benches whose name contains this substring")
+    ap.add_argument("--suite", default=None, dest="only",
+                    help="alias of --only (e.g. --suite paged_decode)")
     args = ap.parse_args()
+    wanted = args.only
     print("name,us_per_call,derived")
     failures = 0
     for fn in ALL:
-        if args.only and args.only not in fn.__name__:
+        if wanted and wanted not in fn.__name__:
             continue
         try:
             for name, us, derived in fn(quick=args.quick):

@@ -74,6 +74,11 @@ class ModelConfig:
     # CPU/dry-run lowerable) | "flash" (Pallas kernel w/ causal block-skip,
     # real-TPU; interpret-mode in tests)
     attn_impl: str = "chunked"
+    # paged decode attention impl: "auto" (Pallas kernel when the backend is
+    # pallas / a TPU, jnp gather otherwise) | "gather" (jnp page gather — the
+    # XLA reference and oracle) | "pallas" (fused page-table-DMA kernel,
+    # real-TPU) | "pallas_interpret" (same kernel interpreted on CPU, tests)
+    paged_attn_impl: str = "auto"
 
     @property
     def hdim(self) -> int:

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots, with XLA references.
+
+- ``w4a16_matmul``:     int4 weights dequantized in VMEM inside the GEMM (§2.3)
+- ``flash_attention``:  causal block-skipping online-softmax prefill attention
+- ``paged_attention``:  decode attention with the KV page-table gather fused
+                        into the kernel (scalar-prefetch block tables), fp16
+                        and int8 pools
+
+``ops.py`` is the dispatching entry point (pallas / interpret / xla);
+``ref.py`` holds the pure-jnp oracles the interpret-mode tests compare
+against.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    default_backend,
+    gqa_paged_attention,
+    mla_paged_attention,
+    quantized_linear,
+    w4a16_matmul,
+)

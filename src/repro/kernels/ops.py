@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QuantizedTensor
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref as _ref
 from repro.kernels import w4a16_matmul as _w4
 
@@ -55,3 +56,36 @@ def quantized_linear(
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y
+
+
+def gqa_paged_attention(q, k_pool, v_pool, table_rows, lengths,
+                        k_scale=None, v_scale=None, *, sm_scale: float,
+                        backend: str = "auto") -> jax.Array:
+    """Fused page-table-gather decode attention (GQA).  The jnp gather
+    reference lives model-side (``models.attention.gqa_decode_paged`` with
+    ``paged_attn_impl="gather"``) — this entry only dispatches the kernel."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(
+            f"paged attention kernel backend must be pallas/interpret, got "
+            f"{backend!r}; use the model-level gather path for XLA")
+    return _pa.gqa_paged_attention(
+        q, k_pool, v_pool, table_rows, lengths, k_scale, v_scale,
+        sm_scale=sm_scale, interpret=(backend == "interpret"))
+
+
+def mla_paged_attention(q_lat, q_pe, ckv_pool, kpe_pool, table_rows, lengths,
+                        ckv_scale=None, kpe_scale=None, *, sm_scale: float,
+                        backend: str = "auto") -> jax.Array:
+    """Fused page-table-gather decode attention (MLA absorbed form)."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(
+            f"paged attention kernel backend must be pallas/interpret, got "
+            f"{backend!r}; use the model-level gather path for XLA")
+    return _pa.mla_paged_attention(
+        q_lat, q_pe, ckv_pool, kpe_pool, table_rows, lengths,
+        ckv_scale, kpe_scale,
+        sm_scale=sm_scale, interpret=(backend == "interpret"))

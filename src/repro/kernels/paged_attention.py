@@ -1,0 +1,334 @@
+"""Pallas TPU paged-attention decode kernel: page-table gather fused into
+flash attention.
+
+The jnp paged decode path materializes ``gather_pages(pool, table)`` as a
+dense ``[B, P*PS, ...]`` array in HBM every step — the pool rows are read,
+written back out as the gathered copy, then read *again* by the attention
+einsum: ~3× the KV bytes of a single streaming pass, plus an O(batch ×
+max-pages) allocation on the memory-bound decode hot path.  This kernel
+indexes the pool *inside* the grid instead: the block table rides in as a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``), and the K/V
+BlockSpec index maps read it to pick the pool page each ``(batch, page)``
+grid cell DMAs into VMEM.  No intermediate gather ever exists in HBM, and
+pages past a sequence's valid length are clamped to the previous block index
+so the pipeline elides their copies — bytes moved scale with *live tokens*,
+not ``batch × max_pages``.
+
+Grids
+  GQA: ``(B, Hkv, P)``, pages innermost; each cell attends the slot's
+  ``grp = H/Hkv`` query heads for one KV head against one page.
+  MLA (absorbed form): ``(B, P)``; scores run in the latent space
+  (``q_lat·ckv + q_pe·kpe``) so the per-page work covers all H heads.
+
+Online-softmax state (m, l, acc) lives in VMEM scratch, initialized at page
+0 and flushed on the last page step (same shape as ``flash_attention``).
+
+Int8 pools: when scale operands are passed, K/V pages are int8 with per-row
+(position, head) f32 scales.  Scores are computed on the raw int8 codes
+(cast to f32 for the MXU) and the scale is applied to the score/probability
+row — identical math to the jnp reference, half the page bytes.
+
+Scalar-prefetch contract (shared with ``serving/kv_cache.py``):
+  ``table[B*P]``  flattened block table; entry ``b*P + p`` is the pool page
+                  holding logical page ``p`` of batch row ``b`` (freed /
+                  unused entries point at the trash page 0);
+  ``lengths[B]``  valid rows per batch row, *including* the token written
+                  this step (``write_pos + 1``); clamps both the in-page
+                  validity mask and the dead-page DMA elision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def _live_pages(length, page_size):
+    """Number of pages holding valid rows (length >= 1 on every decode)."""
+    return (length + page_size - 1) // page_size
+
+
+# ============================================================== GQA kernel ==
+def _gqa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                page_size: int, n_pages: int, scale: float, quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_start = p * page_size
+
+    @pl.when(page_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [grp, Dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [PS, Dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # [PS, Dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # [grp, PS]
+        if quant:
+            # int8 codes hit the MXU; the per-row scale lands on the (tiny)
+            # score row — mirrors the jnp int8 reference exactly
+            s = s * ks_ref[0, :, 0][None, :]
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = pos < length
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(-1, keepdims=True)
+        if quant:
+            pexp = pexp * vs_ref[0, :, 0][None, :]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def gqa_paged_attention(
+    q: jax.Array,               # [B, Hkv, grp, Dh] one decode token
+    k_pool: jax.Array,          # [NP, PS, Hkv, Dh] (bf16/f32 or int8)
+    v_pool: jax.Array,          # [NP, PS, Hkv, Dv]
+    table_rows: jax.Array,      # [B, P] int32 pool page per logical page
+    lengths: jax.Array,         # [B] int32 valid rows incl. this step's token
+    k_scale: jax.Array | None = None,   # [NP, PS, Hkv] f32 (int8 pools)
+    v_scale: jax.Array | None = None,
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:                 # [B, Hkv, grp, Dv] f32
+    b, hkv, grp, dh = q.shape
+    ps = k_pool.shape[1]
+    dv = v_pool.shape[-1]
+    pages = table_rows.shape[1]
+    quant = k_scale is not None
+    flat_tbl = table_rows.reshape(-1).astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def pool_map(bi, hi, pi, tbl, lens):
+        # dead pages re-map to the last live page: the pipeline sees the same
+        # block index as the previous step and elides the DMA entirely
+        pp = jnp.minimum(pi, _live_pages(lens[bi], ps) - 1)
+        return (tbl[bi * pages + pp], 0, hi, 0)
+
+    def scale_map(bi, hi, pi, tbl, lens):
+        pp = jnp.minimum(pi, _live_pages(lens[bi], ps) - 1)
+        return (tbl[bi * pages + pp], 0, hi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, grp, dh), lambda bi, hi, pi, tbl, lens: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, ps, 1, dh), pool_map),
+        pl.BlockSpec((1, ps, 1, dv), pool_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, ps, 1), scale_map),
+            pl.BlockSpec((1, ps, 1), scale_map),
+        ]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, grp, dv), lambda bi, hi, pi, tbl, lens: (bi, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((grp, 1), jnp.float32),
+            pltpu.VMEM((grp, 1), jnp.float32),
+            pltpu.VMEM((grp, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _gqa_kernel, page_size=ps, n_pages=pages, scale=sm_scale,
+            quant=quant,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, grp, dv), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(flat_tbl, lengths, *operands)
+
+
+# ============================================================== MLA kernel ==
+def _mla_kernel(tbl_ref, len_ref, qlat_ref, qpe_ref, ckv_ref, kpe_ref, *rest,
+                page_size: int, n_pages: int, scale: float, quant: bool):
+    if quant:
+        cs_ref, ps_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_start = p * page_size
+
+    @pl.when(page_start < length)
+    def _compute():
+        q_lat = qlat_ref[0].astype(jnp.float32)        # [H, r]
+        q_pe = qpe_ref[0].astype(jnp.float32)          # [H, dr]
+        ckv = ckv_ref[0].astype(jnp.float32)           # [PS, r]
+        kpe = kpe_ref[0].astype(jnp.float32)           # [PS, dr]
+        s_lat = jax.lax.dot_general(
+            q_lat, ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # [H, PS]
+        s_pe = jax.lax.dot_general(
+            q_pe, kpe, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if quant:
+            s_lat = s_lat * cs_ref[0][None, :]
+            s_pe = s_pe * ps_ref[0][None, :]
+        s = (s_lat + s_pe) * scale
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = pos < length
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(-1, keepdims=True)
+        if quant:
+            # o_lat = Σ p·(s_j·ckv_j) = (p ⊙ s) @ ckv_int8
+            pexp = pexp * cs_ref[0][None, :]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, ckv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def mla_paged_attention(
+    q_lat: jax.Array,           # [B, H, r] absorbed query (q_nope · w_k)
+    q_pe: jax.Array,            # [B, H, dr] rope query
+    ckv_pool: jax.Array,        # [NP, PS, r] latent pool (bf16/f32 or int8)
+    kpe_pool: jax.Array,        # [NP, PS, dr]
+    table_rows: jax.Array,      # [B, P] int32
+    lengths: jax.Array,         # [B] int32 valid rows incl. this token
+    ckv_scale: jax.Array | None = None,  # [NP, PS] f32 (int8 pools)
+    kpe_scale: jax.Array | None = None,
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:                 # [B, H, r] f32 latent output
+    b, h, r = q_lat.shape
+    dr = q_pe.shape[-1]
+    ps = ckv_pool.shape[1]
+    pages = table_rows.shape[1]
+    quant = ckv_scale is not None
+    flat_tbl = table_rows.reshape(-1).astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def pool_map(bi, pi, tbl, lens):
+        pp = jnp.minimum(pi, _live_pages(lens[bi], ps) - 1)
+        return (tbl[bi * pages + pp], 0, 0)
+
+    def scale_map(bi, pi, tbl, lens):
+        pp = jnp.minimum(pi, _live_pages(lens[bi], ps) - 1)
+        return (tbl[bi * pages + pp], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, h, r), lambda bi, pi, tbl, lens: (bi, 0, 0)),
+        pl.BlockSpec((1, h, dr), lambda bi, pi, tbl, lens: (bi, 0, 0)),
+        pl.BlockSpec((1, ps, r), pool_map),
+        pl.BlockSpec((1, ps, dr), pool_map),
+    ]
+    operands = [q_lat, q_pe, ckv_pool, kpe_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps), scale_map),
+                     pl.BlockSpec((1, ps), scale_map)]
+        operands += [ckv_scale, kpe_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, h, r), lambda bi, pi, tbl, lens: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _mla_kernel, page_size=ps, n_pages=pages, scale=sm_scale,
+            quant=quant,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(flat_tbl, lengths, *operands)
+
+
+# ====================================================== roofline estimates ==
+def paged_kv_bytes_per_step(lengths, pages_per_slot: int, page_size: int,
+                            row_bytes: int, impl: str) -> int:
+    """Analytic KV bytes one decode step moves through HBM, per layer.
+
+    ``row_bytes`` is the byte cost of one token row across every pool leaf
+    (K+V, or ckv+kpe, plus scale rows for int8 pools).
+
+    - ``"gather"``: the jnp path reads the full trash-padded table
+      (``B × P × PS`` rows), writes the dense gathered copy, and re-reads it
+      in the attention contraction → 3× full-table traffic, independent of
+      how many rows are actually live.
+    - ``"pallas"``: one streaming pass over live pages only
+      (``Σ_b ceil(len_b / PS) × PS`` rows); dead-page DMAs are elided by the
+      block-index clamp.
+    """
+    import numpy as np
+    lengths = np.asarray(lengths)
+    if impl == "gather":
+        return int(3 * lengths.shape[0] * pages_per_slot * page_size * row_bytes)
+    if impl == "pallas":
+        live = -(-lengths // page_size) * page_size
+        return int(live.sum() * row_bytes)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -101,14 +101,23 @@ def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
     """Per-layer KV pools ``[L, num_pages, page_size, ...]`` for the serving
-    engine's block-table pager (``repro.serving.kv_cache``)."""
+    engine's block-table pager (``repro.serving.kv_cache``).  With
+    ``cfg.kv_quant`` the pools are int8 plus per-row f32 scale pools."""
     return LM.init_paged_cache(cfg, num_pages, page_size)
+
+
+def quantize_raw_paged(raw, cfg: ModelConfig):
+    """Quantize raw prefill KV to match int8 page pools (no-op unless
+    ``cfg.kv_quant``); run before ``serving.kv_cache.write_prefix``."""
+    return LM.quantize_raw_paged(raw, cfg)
 
 
 def decode_paged_fn(params, batch, cache, table_rows, cfg: ModelConfig, *,
                     backend: str = "auto"):
     """One decode step against paged pools; ``table_rows[B, P]`` maps each
-    slot's logical pages to pool pages."""
+    slot's logical pages to pool pages.  The attention impl is picked by
+    ``cfg.paged_attn_impl`` (+ ``backend``): the fused Pallas page-gather
+    kernel on TPU / interpret, the jnp dense gather as the XLA reference."""
     return LM.lm_decode_paged(params, batch["token"], cache, batch["position"],
                               table_rows, cfg, backend=backend)
 

@@ -159,14 +159,22 @@ def gqa_prefill(
     return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
 
 
-def _attend_rows(qh, k_rows, v_rows, valid, scale):
+def _attend_rows(qh, k_rows, v_rows, valid, scale, k_s=None, v_s=None):
     """One-token attention of ``qh[B,Hkv,grp,Dh]`` against gathered rows
-    ``k/v[B,S,Hkv,D*]`` with validity mask ``valid[B,S]``."""
+    ``k/v[B,S,Hkv,D*]`` with validity mask ``valid[B,S]``.
+
+    With int8 rows, ``k_s``/``v_s[B,S,Hkv]`` are the per-row dequant scales:
+    the dot streams the int8 codes and the scale is applied to the (tiny)
+    score/probability tensors instead of a dense dequantized copy."""
     sc = jnp.einsum(
         "bhgd,bshd->bhgs", qh.astype(jnp.float32), k_rows.astype(jnp.float32)
     ) * scale
+    if k_s is not None:
+        sc = sc * k_s.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
     sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
     pattn = jax.nn.softmax(sc, axis=-1)
+    if v_s is not None:
+        pattn = pattn * v_s.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
     return jnp.einsum("bhgs,bshd->bhgd", pattn, v_rows.astype(jnp.float32))
 
 
@@ -189,22 +197,14 @@ def gqa_decode(
     qh = q.reshape(b, hkv, grp, dh)
 
     if cfg.kv_quant:
-        kq, ks = _kv_quantize(k[:, 0])
-        vq, vs = _kv_quantize(v[:, 0])
+        kq, ks = kv_quantize_rows(k[:, 0])
+        vq, vs = kv_quantize_rows(v[:, 0])
         k_cache = cache["k"].at[bidx, slot].set(kq)
         v_cache = cache["v"].at[bidx, slot].set(vq)
         k_sc = cache["k_s"].at[bidx, slot].set(ks.astype(cache["k_s"].dtype))
         v_sc = cache["v_s"].at[bidx, slot].set(vs.astype(cache["v_s"].dtype))
-        # dequantize in-flight: the dot streams int8 from HBM, the per-head
-        # scale is applied to the (tiny) score/output tensors instead
-        sc = jnp.einsum(
-            "bhgd,bshd->bhgs", qh.astype(jnp.float32),
-            k_cache.astype(jnp.float32),
-        ) * k_sc.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :] * scale
-        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
-        pattn = jax.nn.softmax(sc, axis=-1)
-        pv = pattn * v_sc.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-        out = jnp.einsum("bhgs,bshd->bhgd", pv, v_cache.astype(jnp.float32))
+        out = _attend_rows(qh, k_cache, v_cache, valid, scale,
+                           k_s=k_sc, v_s=v_sc)
         new_cache = {"k": k_cache, "v": v_cache, "k_s": k_sc, "v_s": v_sc,
                      "lens": lens + 1}
     else:
@@ -238,12 +238,30 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Arr
 
 
 def gather_pages(pool: jax.Array, table_rows: jax.Array) -> jax.Array:
-    """``pool[NP, PS, ...]`` + page table ``table_rows[B, P]`` →
-    ``[B, P*PS, ...]`` rows in logical-position order.  The single gather
-    shared by every paged decode path (and re-exported by
-    ``serving.kv_cache`` for the pager tests)."""
+    """``pool[num_pages, page_size, ...]`` + page table ``table_rows[B, P]``
+    → dense ``[B, P*page_size, ...]`` rows in logical-position order.
+
+    This is the jnp *reference* gather (``paged_attn_impl="gather"``): it
+    materializes the full trash-padded table in HBM every step.  The Pallas
+    paged-attention kernel (``kernels/paged_attention.py``) indexes the pool
+    inside the grid instead and never builds this array.  Re-exported by
+    ``serving.kv_cache`` for the pager tests."""
     g = pool[table_rows]
     return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def _resolve_paged_impl(cfg: ModelConfig, backend: str) -> str:
+    """Map (cfg.paged_attn_impl, kernel backend) to a concrete decode impl."""
+    impl = cfg.paged_attn_impl
+    if impl != "auto":
+        return impl
+    if backend == "interpret":
+        return "pallas_interpret"
+    if backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    ):
+        return "pallas"
+    return "gather"
 
 
 def gqa_decode_paged(
@@ -261,8 +279,6 @@ def gqa_decode_paged(
     """
     b, t, _ = x.shape
     assert t == 1, "decode processes one token"
-    if cfg.kv_quant:
-        raise NotImplementedError("paged decode does not support kv_quant yet")
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
     q, k, v = _qkv(p, x, positions, cfg, backend)
     page_size = pool["k"].shape[1]
@@ -271,27 +287,69 @@ def gqa_decode_paged(
     off = write_pos % page_size
     # distinct slots own distinct pages → scatter indices collide only for
     # idle slots, whose table rows all point at the trash page
-    k_pool = pool["k"].at[pg, off].set(k[:, 0])
-    v_pool = pool["v"].at[pg, off].set(v[:, 0])
-    k_rows = gather_pages(k_pool, table_rows)               # [B, P*PS, Hkv, Dh]
-    v_rows = gather_pages(v_pool, table_rows)
-    valid = jnp.arange(k_rows.shape[1])[None, :] <= write_pos[:, None]
+    if cfg.kv_quant:
+        kq, ks = kv_quantize_rows(k[:, 0])
+        vq, vs = kv_quantize_rows(v[:, 0])
+        new_pool = {
+            "k": pool["k"].at[pg, off].set(kq),
+            "v": pool["v"].at[pg, off].set(vq),
+            "k_s": pool["k_s"].at[pg, off].set(ks.astype(pool["k_s"].dtype)),
+            "v_s": pool["v_s"].at[pg, off].set(vs.astype(pool["v_s"].dtype)),
+        }
+    else:
+        new_pool = {
+            "k": pool["k"].at[pg, off].set(k[:, 0]),
+            "v": pool["v"].at[pg, off].set(v[:, 0]),
+        }
     qh = q.reshape(b, hkv, h // hkv, dh)
-    out = _attend_rows(qh, k_rows, v_rows, valid, dh ** -0.5)
+    scale = dh ** -0.5
+    impl = _resolve_paged_impl(cfg, backend)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as K
+
+        out = K.gqa_paged_attention(
+            qh, new_pool["k"], new_pool["v"], table_rows, write_pos + 1,
+            new_pool.get("k_s"), new_pool.get("v_s"), sm_scale=scale,
+            backend="interpret" if impl == "pallas_interpret" else "pallas",
+        )
+    else:
+        # XLA reference: dense gather of the pool rows (int8 rows gather
+        # their scale rows too; _attend_rows dequantizes in-flight)
+        k_rows = gather_pages(new_pool["k"], table_rows)    # [B,P*PS,Hkv,Dh]
+        v_rows = gather_pages(new_pool["v"], table_rows)
+        valid = jnp.arange(k_rows.shape[1])[None, :] <= write_pos[:, None]
+        out = _attend_rows(
+            qh, k_rows, v_rows, valid, scale,
+            k_s=gather_pages(new_pool["k_s"], table_rows) if cfg.kv_quant else None,
+            v_s=gather_pages(new_pool["v_s"], table_rows) if cfg.kv_quant else None,
+        )
     y = L.apply_linear(
         p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
     )
-    return y, {"k": k_pool, "v": v_pool}
+    return y, new_pool
 
 
 def init_gqa_page_pool(cfg: ModelConfig, num_pages: int, page_size: int):
     hkv, dh = cfg.num_kv_heads, cfg.hdim
     shp = (num_pages, page_size, hkv, dh)
+    if cfg.kv_quant:
+        # int8 rows + per-(position, head) f32 scale pool: halves KV page
+        # bytes on the memory-bound decode path (scales are Dh× smaller)
+        return {
+            "k": jnp.zeros(shp, jnp.int8),
+            "v": jnp.zeros(shp, jnp.int8),
+            "k_s": jnp.zeros((num_pages, page_size, hkv), jnp.float32),
+            "v_s": jnp.zeros((num_pages, page_size, hkv), jnp.float32),
+        }
     return {"k": jnp.zeros(shp, cfg.jdtype), "v": jnp.zeros(shp, cfg.jdtype)}
 
 
-def _kv_quantize(x: jax.Array):
-    """Per-head symmetric int8: x [B,Hkv,Dh] -> (int8, scale [B,Hkv])."""
+def kv_quantize_rows(x: jax.Array):
+    """Symmetric per-row int8 over the trailing dim:
+    ``x[..., D] -> (int8[..., D], f32 scale[...])``.  Used for the contiguous
+    int8 KV cache (per position, head), the int8 page pools, and the raw
+    prefill KV quantized on paged admission."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / amax[..., None] * 127.0),
                  -127, 127).astype(jnp.int8)
@@ -371,12 +429,10 @@ def mla_prefill(
     return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
 
 
-def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
-                         backend: str):
-    """Absorbed-form latent attention of a single query token against gathered
-    latent rows ``ckv[B,S,r]`` / ``kpe[B,S,dr]`` with mask ``valid[B,S]``."""
+def _mla_absorb_weights(p, cfg: ModelConfig):
+    """Split ``wkv_b`` into the absorbed key / value projections
+    ``(w_k[r,H,nope], w_v[r,H,vdim])``, dequantizing if needed."""
     m = cfg.mla
-    b = q_nope.shape[0]
     h = cfg.num_heads
     from repro.core.quantize import QuantizedTensor
     from repro.core.quantize import dequantize as _deq
@@ -385,8 +441,17 @@ def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
     if isinstance(wkv_b, QuantizedTensor):
         wkv_b = _deq(wkv_b, cfg.jdtype)
     wkv_b = wkv_b.reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
-    w_k = wkv_b[..., : m.qk_nope_head_dim]                  # [r,H,nope]
-    w_v = wkv_b[..., m.qk_nope_head_dim :]                  # [r,H,vdim]
+    return wkv_b[..., : m.qk_nope_head_dim], wkv_b[..., m.qk_nope_head_dim :]
+
+
+def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
+                         backend: str):
+    """Absorbed-form latent attention of a single query token against gathered
+    latent rows ``ckv[B,S,r]`` / ``kpe[B,S,dr]`` with mask ``valid[B,S]``."""
+    m = cfg.mla
+    b = q_nope.shape[0]
+    h = cfg.num_heads
+    w_k, w_v = _mla_absorb_weights(p, cfg)
 
     # absorb: q_lat[b,h,r] = q_nope[b,h,n] · w_k[r,h,n]
     q_lat = jnp.einsum(
@@ -435,24 +500,76 @@ def mla_decode_paged(
     for the page-table convention."""
     b, t, _ = x.shape
     assert t == 1
+    m = cfg.mla
+    h = cfg.num_heads
     q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
     ckv_new, kpe_new = _mla_latent(p, x, positions, cfg, backend)
     page_size = pool["ckv"].shape[1]
     bidx = jnp.arange(b)
     pg = table_rows[bidx, write_pos // page_size]
     off = write_pos % page_size
-    ckv_pool = pool["ckv"].at[pg, off].set(ckv_new[:, 0])
-    kpe_pool = pool["kpe"].at[pg, off].set(kpe_new[:, 0])
-    ckv = gather_pages(ckv_pool, table_rows)
-    kpe = gather_pages(kpe_pool, table_rows)
-    valid = jnp.arange(ckv.shape[1])[None, :] <= write_pos[:, None]
-    out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg, backend)
+    if cfg.kv_quant:
+        cq, cs = kv_quantize_rows(ckv_new[:, 0])            # [B,r] → per-row
+        kq, ks = kv_quantize_rows(kpe_new[:, 0])
+        new_pool = {
+            "ckv": pool["ckv"].at[pg, off].set(cq),
+            "kpe": pool["kpe"].at[pg, off].set(kq),
+            "ckv_s": pool["ckv_s"].at[pg, off].set(
+                cs.astype(pool["ckv_s"].dtype)),
+            "kpe_s": pool["kpe_s"].at[pg, off].set(
+                ks.astype(pool["kpe_s"].dtype)),
+        }
+    else:
+        new_pool = {
+            "ckv": pool["ckv"].at[pg, off].set(ckv_new[:, 0]),
+            "kpe": pool["kpe"].at[pg, off].set(kpe_new[:, 0]),
+        }
+    impl = _resolve_paged_impl(cfg, backend)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as K
+
+        w_k, w_v = _mla_absorb_weights(p, cfg)
+        q_lat = jnp.einsum(
+            "bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+            w_k.astype(jnp.float32),
+        )
+        o_lat = K.mla_paged_attention(
+            q_lat, q_pe[:, 0], new_pool["ckv"], new_pool["kpe"], table_rows,
+            write_pos + 1, new_pool.get("ckv_s"), new_pool.get("kpe_s"),
+            sm_scale=scale,
+            backend="interpret" if impl == "pallas_interpret" else "pallas",
+        )
+        out = jnp.einsum(
+            "bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32)
+        ).reshape(b, 1, h * m.v_head_dim)
+    else:
+        ckv = gather_pages(new_pool["ckv"], table_rows)
+        kpe = gather_pages(new_pool["kpe"], table_rows)
+        if cfg.kv_quant:
+            # XLA reference: dequantize the gathered latent rows in-flight
+            ckv = ckv.astype(jnp.float32) * gather_pages(
+                new_pool["ckv_s"], table_rows).astype(jnp.float32)[..., None]
+            kpe = kpe.astype(jnp.float32) * gather_pages(
+                new_pool["kpe_s"], table_rows).astype(jnp.float32)[..., None]
+        valid = jnp.arange(ckv.shape[1])[None, :] <= write_pos[:, None]
+        out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg,
+                                   backend)
     y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
-    return y, {"ckv": ckv_pool, "kpe": kpe_pool}
+    return y, new_pool
 
 
 def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int):
     m = cfg.mla
+    if cfg.kv_quant:
+        return {
+            "ckv": jnp.zeros((num_pages, page_size, m.kv_lora_rank), jnp.int8),
+            "kpe": jnp.zeros((num_pages, page_size, m.qk_rope_head_dim),
+                             jnp.int8),
+            "ckv_s": jnp.zeros((num_pages, page_size), jnp.float32),
+            "kpe_s": jnp.zeros((num_pages, page_size), jnp.float32),
+        }
     return {
         "ckv": jnp.zeros((num_pages, page_size, m.kv_lora_rank), cfg.jdtype),
         "kpe": jnp.zeros((num_pages, page_size, m.qk_rope_head_dim), cfg.jdtype),

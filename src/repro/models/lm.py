@@ -373,8 +373,6 @@ def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
         return False, "hybrid stacks mix O(1) SSM state with shared-attn KV"
     if cfg.mixer not in ("attention", "mla"):
         return False, f"{cfg.mixer} state is O(1) per slot; paging buys nothing"
-    if cfg.kv_quant:
-        return False, "int8 KV pools not implemented for the paged path yet"
     return True, ""
 
 
@@ -390,6 +388,24 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
     )
     return {"layers": jax.tree.map(
         lambda *xs: jnp.stack(xs), *[mk() for _ in range(cfg.num_layers)])}
+
+
+def quantize_raw_paged(raw: Any, cfg: ModelConfig) -> Any:
+    """Quantize raw prefill KV (``{"layers": {leaf: [L, n, T, ...]}}``) to
+    match the int8 page pools: every KV leaf becomes int8 codes plus a
+    ``<leaf>_s`` f32 per-row scale leaf (per (layer, row, position[, head])),
+    so the admission scatter (``serving.kv_cache.write_prefix``) maps 1:1
+    onto the pool tree.  No-op when ``cfg.kv_quant`` is off."""
+    if not cfg.kv_quant:
+        return raw
+    out = {}
+    for name, leaf in raw["layers"].items():
+        if name == "lens":
+            continue
+        codes, scales = A.kv_quantize_rows(leaf)
+        out[name] = codes
+        out[name + "_s"] = scales.astype(jnp.float32)
+    return {"layers": out}
 
 
 def lm_decode_paged(

@@ -12,8 +12,12 @@ from a fixed-slot continuous batcher backed by a **paged KV cache**:
   buckets and each bucket prefills **jointly** — one compiled ``[n, blen]``
   trace per bucket instead of one B=1 trace per request — and the raw prefix
   KV is scattered straight into the pages (no per-slot cache merging);
-- every engine step decodes ONE token for all active slots against the
-  gathered pages (W4A16 matmuls), sampling **per-slot** temperatures;
+- every engine step decodes ONE token for all active slots straight against
+  the pages (W4A16 matmuls; on TPU the Pallas paged-attention kernel DMAs
+  pages by block table inside the grid, on CPU/XLA the jnp gather reference
+  runs — ``cfg.paged_attn_impl``), sampling **per-slot** temperatures;
+- with ``cfg.kv_quant`` the pools are int8 + per-row f32 scales: prefix rows
+  are quantized on admission, decode tokens before their pool write;
 - finished slots free their pages immediately and are refilled from the
   queue — no head-of-line blocking, the continuous-batching win.
 """
@@ -149,6 +153,9 @@ class ServingEngine:
                 self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
             raw = {"layers": {k: v for k, v in raw["layers"].items()
                               if k != "lens"}}
+            # int8 pools: quantize the raw prefix rows per-(position, head)
+            # so the scatter below writes codes + scale leaves in one pass
+            raw = api.quantize_raw_paged(raw, self.cfg)
             rows = self.pager.table()[bkt.slots]           # [n, P]
             page, off = KV.prefix_write_plan(lens, rows, self.PS, blen)
             self.pools = KV.write_prefix(
@@ -175,6 +182,10 @@ class ServingEngine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        # use-after-free tripwire: no active slot may point at the trash page
+        KV.assert_live_tables(
+            self.pager.table(), self.pos, self.PS,
+            [s is not None for s in self.slots])
         tok = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
         table = jnp.asarray(self.pager.table())

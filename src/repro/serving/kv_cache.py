@@ -131,6 +131,29 @@ def write_prefix(pools: Any, kv: Any, page: jax.Array, off: jax.Array) -> Any:
     return jax.tree.map(put, pools, kv)
 
 
+def assert_live_tables(table, write_pos, page_size: int, active) -> None:
+    """Stale-table detection: an *active* slot's live page-table prefix must
+    never reference the trash page — table[s, p] == 0 for p within the pages
+    covering positions ``0..write_pos[s]`` means the slot's pages were freed
+    (or never allocated) while it is still decoding, i.e. a pager
+    use-after-free.  Raises ``RuntimeError`` naming the slot and logical page
+    instead of letting the decode silently read/clobber the trash page.
+    """
+    table = np.asarray(table)
+    write_pos = np.asarray(write_pos)
+    need = write_pos // page_size + 1       # pages covering 0..write_pos
+    for s in np.nonzero(np.asarray(active))[0]:
+        row = table[s, : need[s]]
+        stale = np.nonzero(row == TRASH_PAGE)[0]
+        if stale.size:
+            raise RuntimeError(
+                f"stale page table: active slot {int(s)} (write position "
+                f"{int(write_pos[s])}) references the freed/trash page at "
+                f"logical page {int(stale[0])} — pages were reclaimed while "
+                "the slot was still decoding")
+
+
 # canonical page gather lives next to the attention decode paths that
-# consume it; re-exported here so pager users/tests need only this module
+# consume it (the jnp reference for the Pallas paged-attention kernel);
+# re-exported here so pager users/tests need only this module
 from repro.models.attention import gather_pages  # noqa: E402,F401
