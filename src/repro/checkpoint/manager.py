@@ -31,14 +31,37 @@ import numpy as np
 SEP = "␟"  # path separator unlikely to appear in keys
 
 
+def _to_numpy(leaf) -> Tuple[np.ndarray, str]:
+    """(npz-safe array, original dtype name).  bf16 (ml_dtypes, which npz
+    can't store) is widened to f32; loaders narrow back via the dtype name."""
+    dtype = str(jax.numpy.asarray(leaf).dtype)
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V":
+        arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+    return arr, dtype
+
+
+def _publish_dir(tmp: Path, final: Path) -> None:
+    """Atomically publish ``tmp`` as ``final``.  ``os.replace`` cannot swap
+    non-empty directories, so an existing ``final`` is renamed aside first: a
+    crash between the renames loses nothing — the previous version survives
+    as ``<name>.old`` and readers simply see no published dir until retry."""
+    if final.exists():
+        old = final.with_name(final.name + ".old")
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+        os.replace(tmp, final)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        arr = np.asarray(leaf)
-        if arr.dtype.kind == "V":  # ml_dtypes (bf16) — npz can't store them
-            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
-        out[key] = arr
+        out[key] = _to_numpy(leaf)[0]
     return out
 
 
@@ -73,7 +96,7 @@ class CheckpointManager:
         np.savez(tmp / "arrays.npz", **flat)
         (tmp / "meta.json").write_text(json.dumps(
             {"step": step, **(metadata or {})}, default=str))
-        os.replace(tmp, final)          # atomic publish
+        _publish_dir(tmp, final)        # atomic publish
         self._gc()
         return final
 
@@ -119,6 +142,110 @@ class CheckpointManager:
             )
         meta = json.loads((d / "meta.json").read_text())
         return tree, meta
+
+
+# ------------------------------------------------------- PTQ artifacts -----
+# Quantize-once / serve-many: a PTQ artifact is a directory holding the
+# *quantized* param pytree (QuantizedTensor leaves flattened to
+# ``path␟packed`` / ``␟scales`` / ``␟zeros`` npz entries — packed stays uint8
+# through the round trip) plus a self-describing ``meta.json`` (config hash,
+# per-leaf dtypes, quantized paths, PTQ report).  Written atomically like
+# train checkpoints (tmp dir + rename), so a crash mid-save never publishes a
+# half artifact.  ``core.apply.save_ptq/load_ptq`` are the typed entry points.
+
+PTQ_FORMAT_VERSION = 1
+_QT_FIELDS = ("packed", "scales", "zeros")
+
+
+def _walk_ptq(tree, prefix=()):
+    """Yield (path, leaf) pairs, keeping QuantizedTensor leaves whole."""
+    from repro.core.quantize import QuantizedTensor
+
+    if isinstance(tree, QuantizedTensor):
+        yield prefix, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk_ptq(tree[k], prefix + (str(k),))
+    elif tree is None:
+        return
+    else:
+        yield prefix, tree
+
+
+def save_ptq_artifact(directory: str | Path, tree: Any,
+                      meta: Optional[Dict] = None) -> Path:
+    """Atomically write a quantized param pytree + metadata to ``directory``."""
+    final = Path(directory)
+    tmp = final.with_name(final.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    qpaths = []
+    from repro.core.quantize import QuantizedTensor
+
+    for path, leaf in _walk_ptq(tree):
+        key = SEP.join(path)
+        if isinstance(leaf, QuantizedTensor):
+            qpaths.append(list(path))
+            for f in _QT_FIELDS:
+                fkey = key + SEP + f
+                flat[fkey], dtypes[fkey] = _to_numpy(getattr(leaf, f))
+        else:
+            flat[key], dtypes[key] = _to_numpy(leaf)
+    np.savez(tmp / "arrays.npz", **flat)
+    (tmp / "meta.json").write_text(json.dumps({
+        "format_version": PTQ_FORMAT_VERSION,
+        "quantized": qpaths,
+        "dtypes": dtypes,
+        **(meta or {}),
+    }))
+    _publish_dir(tmp, final)        # atomic publish (old version kept aside)
+    return final
+
+
+def has_ptq_artifact(directory: str | Path) -> bool:
+    d = Path(directory)
+    return (d / "meta.json").exists() and (d / "arrays.npz").exists()
+
+
+def load_ptq_artifact(directory: str | Path) -> Tuple[Any, Dict]:
+    """Rebuild the quantized pytree (QuantizedTensor leaves re-assembled,
+    dtypes restored) from :func:`save_ptq_artifact` output."""
+    from repro.core.quantize import QuantizedTensor
+
+    d = Path(directory)
+    if not has_ptq_artifact(d):
+        raise FileNotFoundError(f"no PTQ artifact at {d}")
+    meta = json.loads((d / "meta.json").read_text())
+    if meta.get("format_version") != PTQ_FORMAT_VERSION:
+        raise ValueError(
+            f"PTQ artifact format {meta.get('format_version')} != "
+            f"{PTQ_FORMAT_VERSION}")
+    dtypes = meta["dtypes"]
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files}
+
+    tree: Dict[str, Any] = {}
+    for key, arr in flat.items():
+        leaf = jax.numpy.asarray(arr).astype(dtypes[key])
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+
+    def assemble(path):
+        node = tree
+        for p in path[:-1]:
+            node = node[p]
+        node[path[-1]] = QuantizedTensor(**{
+            f: node[path[-1]][f] for f in _QT_FIELDS})
+
+    for qp in meta["quantized"]:
+        assemble(qp)
+    return tree, meta
 
 
 def install_sigterm_checkpoint(save_fn: Callable[[], None]):

@@ -2,10 +2,18 @@
 group-wise int4-quantize.  Mirrors the paper's vLLM flow: the user hands us
 FP16/bf16 params; quantization happens during placement (quantize-on-load),
 so only packed int4 + scales ever reside in device memory for linear weights.
+
+Quantize-once / serve-many: :func:`save_ptq` persists the quantized pytree +
+:class:`PTQReport` as an on-disk artifact (``checkpoint/manager.py``) keyed by
+a config fingerprint; :func:`load_ptq` boots straight from it — zero
+calibration batches, zero α-search steps — refusing stale artifacts.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -37,10 +45,47 @@ def quantizable_paths(cfg: ModelConfig) -> List[Tuple[Any, ...]]:
     return out
 
 
+def _fit_group(ci: int, group_size: int) -> int:
+    """Largest power-of-two divisor of ``ci`` at most ``group_size``."""
+    g = group_size
+    while g > 2 and ci % g != 0:
+        g //= 2
+    return max(g, 2)
+
+
+def _mla_absorbed_quantize(w: jax.Array, cfg: ModelConfig, qcfg: QuantConfig):
+    """Stacked int4 absorbed-form projections derived from a *smoothed fp*
+    ``wkv_b[*, r, H*(nope+v)]``.
+
+    Absorbed MLA decode contracts the two ``wkv_b`` halves along *different*
+    axes: ``q_lat = q_nope · w_k`` sums over the nope head dim while
+    ``out = o_lat · w_v`` sums over the latent rank r — and group quantization
+    lives on the contraction axis.  So the k-half is stored transposed
+    (``wk_t[H, nope, r]``, groups along nope) and the v-half head-stacked
+    (``wv[H, r, v]``, groups along r); heads ride the grouped kernel's expert
+    grid axis.  The extra int4 copy of the k-half costs ~1/8 of one bf16
+    copy — the price of never re-inflating ``wkv_b`` in HBM at decode."""
+    m = cfg.mla
+    h = cfg.num_heads
+    wr = w.reshape(*w.shape[:-1], h, m.qk_nope_head_dim + m.v_head_dim)
+    wk = jnp.moveaxis(wr[..., : m.qk_nope_head_dim], -3, -1)  # [*, H, n, r]
+    wv = jnp.swapaxes(wr[..., m.qk_nope_head_dim:], -3, -2)   # [*, H, r, v]
+    gk = _fit_group(m.qk_nope_head_dim, qcfg.group_size)
+    gv = _fit_group(m.kv_lora_rank, qcfg.group_size)
+    return {
+        "wk_t": quantize(wk, group_size=gk, dtype=cfg.jdtype),
+        "wv": quantize(wv, group_size=gv, dtype=cfg.jdtype),
+    }
+
+
 def quantize_params(
     params, cfg: ModelConfig, qcfg: QuantConfig
 ) -> Tuple[Any, List[Tuple[Any, ...]], int, int]:
-    """Replace every quantizable linear weight with a QuantizedTensor."""
+    """Replace every quantizable linear weight with a QuantizedTensor.
+
+    MLA layers additionally grow ``mixer/wkv_b_absorbed`` — stacked int4
+    absorbed-form decode projections (see :func:`_mla_absorbed_quantize`), so
+    no serving path ever needs to dequantize ``wkv_b`` wholesale."""
     fp_bytes = quant_bytes = 0
     done = []
     for wp in quantizable_paths(cfg):
@@ -53,6 +98,12 @@ def quantize_params(
         fp_bytes += w.size * 2
         quant_bytes += qt.nbytes_quant()
         done.append(wp)
+        if cfg.mla is not None and wp[-2:] == ("wkv_b", "w"):
+            ab = _mla_absorbed_quantize(w, cfg, qcfg)
+            ap = wp[:-2] + ("wkv_b_absorbed",)
+            params = SM.tset(params, ap, ab, create=True)
+            quant_bytes += ab["wk_t"].nbytes_quant() + ab["wv"].nbytes_quant()
+            done.append(ap)
     return params, done, fp_bytes, quant_bytes
 
 
@@ -94,3 +145,82 @@ def smoothquant_plus(
 def rtn_baseline(params, cfg: ModelConfig, qcfg: QuantConfig = QuantConfig()):
     """Paper baseline: plain group-wise RTN, no smoothing."""
     return quantize_params(params, cfg, qcfg)[0]
+
+
+# ------------------------------------------------------- PTQ artifact I/O ---
+class StalePTQArtifactError(ValueError):
+    """The artifact was produced under a different (model, quant) config."""
+
+
+def ptq_fingerprint(cfg: ModelConfig, qcfg: QuantConfig) -> str:
+    """Config hash stored in / checked against the artifact: any change to
+    the model or quantization config invalidates saved artifacts, so a stale
+    artifact can never be silently served."""
+    return hashlib.sha256(repr((cfg, qcfg)).encode()).hexdigest()[:16]
+
+
+def has_ptq(directory) -> bool:
+    from repro.checkpoint import manager as CK
+
+    return CK.has_ptq_artifact(directory)
+
+
+def ptq_matches(directory, cfg: ModelConfig, qcfg: QuantConfig) -> bool:
+    """True iff an artifact exists AND was built for exactly this config —
+    i.e. a boot from it will actually skip calibration + α-search."""
+    from repro.checkpoint import manager as CK
+
+    if not CK.has_ptq_artifact(directory):
+        return False
+    try:
+        meta = json.loads((Path(directory) / "meta.json").read_text())
+    except (ValueError, OSError):
+        return False  # corrupt/unreadable metadata ≙ no usable artifact
+    return meta.get("config_hash") == ptq_fingerprint(cfg, qcfg)
+
+
+def save_ptq(directory, qparams, report: PTQReport, cfg: ModelConfig,
+             qcfg: QuantConfig) -> Path:
+    """Persist the quantized pytree + report as a self-describing artifact."""
+    from repro.checkpoint import manager as CK
+
+    meta = {
+        "config_hash": ptq_fingerprint(cfg, qcfg),
+        "model": cfg.name,
+        "report": {
+            "alpha": float(report.alpha),
+            "search_loss": float(report.search_loss),
+            "loss_curve": {str(k): float(v)
+                           for k, v in report.loss_curve.items()},
+            "quantized_paths": [list(map(str, p))
+                                for p in report.quantized_paths],
+            "fp_bytes": int(report.fp_bytes),
+            "quant_bytes": int(report.quant_bytes),
+        },
+    }
+    return CK.save_ptq_artifact(directory, qparams, meta)
+
+
+def load_ptq(directory, cfg: ModelConfig,
+             qcfg: QuantConfig) -> Tuple[Any, PTQReport]:
+    """Boot from a saved artifact: zero calibration, zero α-search.
+
+    Raises :class:`StalePTQArtifactError` when the artifact's config hash does
+    not match ``(cfg, qcfg)``."""
+    from repro.checkpoint import manager as CK
+
+    tree, meta = CK.load_ptq_artifact(directory)
+    want = ptq_fingerprint(cfg, qcfg)
+    if meta.get("config_hash") != want:
+        raise StalePTQArtifactError(
+            f"PTQ artifact at {directory} was built for config hash "
+            f"{meta.get('config_hash')!r}, engine wants {want!r} "
+            f"(model/quant config changed — re-quantize)")
+    r = meta["report"]
+    report = PTQReport(
+        alpha=r["alpha"], search_loss=r["search_loss"],
+        loss_curve={float(k): v for k, v in r["loss_curve"].items()},
+        quantized_paths=[tuple(p) for p in r["quantized_paths"]],
+        fp_bytes=r["fp_bytes"], quant_bytes=r["quant_bytes"],
+    )
+    return tree, report

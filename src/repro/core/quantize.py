@@ -31,12 +31,18 @@ DEFAULT_GROUP_SIZE = 128
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
-    """A group-wise int4-quantized 2-D weight, packed 2 codes / uint8.
+    """A group-wise int4-quantized weight, packed 2 codes / uint8.
+
+    Leading dims are first-class: a *stacked* quantized leaf (layer stacks
+    ``[L, ...]``, MoE experts ``[E, Ci, Co]``, MLA absorbed heads
+    ``[H, Ci, Co]``) carries the extra dims on all three arrays, quantized
+    independently along each trailing ``[Ci, Co]`` plane — ``lax.scan`` and
+    the EP sharding rules treat the leaves like any stacked fp weight.
 
     Attributes:
-      packed: uint8[Ci//2, Co] — packed int4 codes (low nibble = even row).
-      scales: dtype[Ci//G, Co] — per-group, per-out-channel step size Δ.
-      zeros:  dtype[Ci//G, Co] — per-group, per-out-channel zero point
+      packed: uint8[*lead, Ci//2, Co] — packed int4 codes (group-split rows).
+      scales: dtype[*lead, Ci//G, Co] — per-group, per-out-channel step Δ.
+      zeros:  dtype[*lead, Ci//G, Co] — per-group, per-out-channel zero point
               (stored in the *float* domain as ``zero_code`` so dequant is
               ``(q - zeros) * scales``).
     """
@@ -50,12 +56,26 @@ class QuantizedTensor:
         return (*self.packed.shape[:-2], self.packed.shape[-2] * 2, self.packed.shape[-1])
 
     @property
+    def ndim(self) -> int:
+        return self.packed.ndim
+
+    @property
     def group_size(self) -> int:
         return (self.packed.shape[-2] * 2) // self.scales.shape[-2]
 
     @property
     def dtype(self):
         return self.scales.dtype
+
+    def __getitem__(self, idx) -> "QuantizedTensor":
+        """Index/slice *leading* (stack) dims, e.g. ``qt[e]`` → one expert's
+        2-D tensor.  The packed/group planes themselves are not indexable."""
+        if self.packed.ndim < 3:
+            raise IndexError("QuantizedTensor[...] indexes leading stack dims "
+                             "only; this tensor is 2-D")
+        return QuantizedTensor(
+            packed=self.packed[idx], scales=self.scales[idx],
+            zeros=self.zeros[idx])
 
     def nbytes_quant(self) -> int:
         return (

@@ -72,11 +72,19 @@ def tget(tree, path: Path):
     return tree
 
 
-def tset(tree, path: Path, val):
+def tset(tree, path: Path, val, *, create: bool = False):
+    """Functionally set ``path`` to ``val``.  A missing segment raises
+    KeyError (a mistyped path must fail loudly, not graft a dead branch)
+    unless ``create=True`` — used only where growing the tree is the point
+    (quantize_params inserting ``wkv_b_absorbed`` next to ``wkv_b``)."""
     if not path:
         return val
     out = dict(tree)
-    out[path[0]] = tset(tree[path[0]], path[1:], val)
+    if create and isinstance(tree, dict) and path[0] not in tree:
+        sub = {}
+    else:
+        sub = tree[path[0]]
+    out[path[0]] = tset(sub, path[1:], val, create=create)
     return out
 
 

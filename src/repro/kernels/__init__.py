@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots, with XLA references.
 
 - ``w4a16_matmul``:     int4 weights dequantized in VMEM inside the GEMM (§2.3)
+- ``w4a16_grouped``:    the same GEMM over stacked [E, Ci, Co] weights with the
+                        expert/head dim on the grid (MoE experts, MLA absorbed)
 - ``flash_attention``:  causal block-skipping online-softmax prefill attention
 - ``paged_attention``:  decode attention with the KV page-table gather fused
                         into the kernel (scalar-prefetch block tables), fp16
@@ -15,5 +17,6 @@ from repro.kernels.ops import (  # noqa: F401
     gqa_paged_attention,
     mla_paged_attention,
     quantized_linear,
+    w4a16_grouped_matmul,
     w4a16_matmul,
 )

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.quantize import QuantizedTensor
 from repro.kernels import paged_attention as _pa
 from repro.kernels import ref as _ref
+from repro.kernels import w4a16_grouped as _w4g
 from repro.kernels import w4a16_matmul as _w4
 
 
@@ -42,6 +43,33 @@ def w4a16_matmul(
         )
     if backend == "xla":
         return _ref.w4a16_matmul_ref(x, qt)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def w4a16_grouped_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    backend: str = "auto",
+    block_c: int = _w4g.DEFAULT_BLOCK_C,
+    block_co: int = _w4g.DEFAULT_BLOCK_CO,
+) -> jax.Array:
+    """Expert-batched quantized contraction ``x[E,C,D] @ dequant(qt)[E,D,F]``.
+
+    The serving entry for stacked ``[E, Ci, Co]`` weights (MoE experts, MLA
+    absorbed-form heads): packed int4 + scales are the only resident weight
+    format on every backend — the XLA path dequantizes inside the fused
+    contraction, never as a persisted dense copy."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend == "pallas":
+        return _w4g.w4a16_grouped_matmul(
+            x, qt, block_c=block_c, block_co=block_co)
+    if backend == "interpret":
+        return _w4g.w4a16_grouped_matmul(
+            x, qt, block_c=block_c, block_co=block_co, interpret=True)
+    if backend == "xla":
+        return _ref.w4a16_grouped_ref(x, qt)
     raise ValueError(f"unknown backend {backend!r}")
 
 

@@ -18,3 +18,19 @@ def w4a16_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
         x.astype(jnp.float32), w, preferred_element_type=jnp.float32
     )
     return y.astype(x.dtype)
+
+
+def w4a16_grouped_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Oracle for the expert-batched grouped kernel: dequantize the stacked
+    ``[E, Ci, Co]`` weight, then a batched einsum.
+
+    x: [E, C, Ci] per-expert activations; returns [E, C, Co] in x.dtype,
+    accumulated in f32.  This is also the ``backend="xla"`` serving path on
+    CPU hosts — XLA fuses the dequant into the contraction's producer.
+    """
+    w = dequantize(qt, jnp.float32)
+    y = jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w,
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x.dtype)

@@ -1,0 +1,129 @@
+"""Expert-batched grouped W4A16 Pallas TPU kernel.
+
+Lifts the ``w4a16_matmul`` contract to *stacked* ``[E, Ci, Co]`` weights:
+``x[E, C, D] @ dequant(qt)[E, D, F] -> [E, C, F]`` with the expert dim as the
+outermost grid axis.  Each ``(e, i, j, k)`` grid step DMAs one packed block of
+expert ``e`` into VMEM, expands to f32 *in VMEM* and feeds the MXU — int4 and
+scales are the only weight bytes that ever cross HBM, which is the §2.3
+roofline win applied per expert.  This is the serving path for MoE expert
+FFNs (``models/mlp.py``, experts ride the grid) and for MLA's absorbed-form
+decode projections (``models/attention.py``, heads ride the grid); both used
+to re-inflate a dense f32 weight in HBM every step via ``dequantize``.
+
+Layout contract is identical to ``w4a16_matmul``: group-split packing along
+the contraction axis, the contraction block pinned to the quantization group
+so each grid step unpacks with one sublane ``concat`` and uses exactly one
+``scales``/``zeros`` row.  Zero-padded capacity rows (ragged MoE dispatch)
+are harmless: a zero activation row contributes a zero output row regardless
+of the asymmetric zero-points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import QuantizedTensor
+from repro.kernels.w4a16_matmul import _CompilerParams, _dequant_block, _round_up
+
+DEFAULT_BLOCK_C = 256
+DEFAULT_BLOCK_CO = 256
+
+
+def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # this expert's block: packed (bci//2, bco) uint8; scales/zeros (1, bco)
+    w = _dequant_block(packed_ref[0], scales_ref[0], zeros_ref[0])
+    x = x_ref[0].astype(jnp.float32)  # (bc, bci)
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_co", "interpret")
+)
+def w4a16_grouped_matmul(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_co: int = DEFAULT_BLOCK_CO,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x[E, C, D] @ dequant(qt)[E, D, F] -> [E, C, F]`` via Pallas.
+
+    One grid cell touches one expert only, so sharding the expert axis (EP)
+    shards the grid.  The contraction block is pinned to the quantization
+    group size (whole groups per step, one scales/zeros row).
+    """
+    if qt.packed.ndim != 3:
+        raise ValueError(
+            f"grouped kernel needs stacked [E, Ci, Co] weights; got packed "
+            f"shape {qt.packed.shape}")
+    if x.ndim != 3:
+        raise ValueError(f"expected x[E, C, D], got shape {x.shape}")
+    e, c, d = x.shape
+    if e != qt.packed.shape[0]:
+        raise ValueError(f"x experts E={e} != weight experts {qt.packed.shape[0]}")
+    if d != qt.shape[-2]:
+        raise ValueError(f"x Ci={d} != weight Ci={qt.shape[-2]}")
+    co = qt.packed.shape[-1]
+    group = qt.group_size
+
+    # decode-sized c (< block_c, e.g. MLA absorbed B rows per head): bc pins
+    # to the 8-padded row count — one C-grid step, cached per shape
+    bc = min(block_c, _round_up(c, 8))
+    c_pad = _round_up(c, bc)
+    if c_pad != c:
+        x = jnp.pad(x, ((0, 0), (0, c_pad - c), (0, 0)))
+    bco = min(block_co, co)
+    if co % bco != 0:
+        raise ValueError(f"Co={co} not divisible by block_co={bco}")
+    n_c, n_co, n_k = c_pad // bc, co // bco, d // group
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(e, n_c, n_co, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bc, group), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, group // 2, bco), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bco), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c_pad, co), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bco), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, qt.packed, qt.scales, qt.zeros)
+
+    return out[:, :c] if c_pad != c else out
+
+
+def grouped_weight_bytes(
+    e: int, d: int, f: int, group: int, scale_bytes: int = 2
+) -> tuple[int, int]:
+    """(packed int4 + scales/zeros bytes, dense bf16 bytes) one full pass over
+    the stacked weight moves through HBM — the ~4x roofline claim the
+    ``w4a16_moe`` bench suite tracks."""
+    packed = e * (d // 2) * f
+    sz = 2 * e * (d // group) * f * scale_bytes
+    return packed + sz, e * d * f * 2

@@ -35,6 +35,19 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
 )
 
 
+def _dequant_block(packed, scale, zero):
+    """Expand one packed group-split weight block to f32 *in VMEM*: nibble
+    split, sublane concat back to group order, then ``(codes − zero)·scale``.
+    Shared by the 2-D and expert-grouped kernel bodies — the packing contract
+    lives in exactly one place."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    codes = jnp.concatenate([lo, hi], axis=0)  # (bci, bco) group-split order
+    return (codes.astype(jnp.float32) - zero.astype(jnp.float32)) * scale.astype(
+        jnp.float32
+    )
+
+
 def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
     k = pl.program_id(2)
 
@@ -42,15 +55,8 @@ def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    packed = packed_ref[...]  # (bci//2, bco) uint8
-    lo = (packed & 0x0F).astype(jnp.int8)
-    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
-    codes = jnp.concatenate([lo, hi], axis=0)  # (bci, bco) group-split order
-    scale = scales_ref[...]  # (1, bco)
-    zero = zeros_ref[...]  # (1, bco)
-    w = (codes.astype(jnp.float32) - zero.astype(jnp.float32)) * scale.astype(
-        jnp.float32
-    )
+    # packed (bci//2, bco) uint8; scales/zeros (1, bco)
+    w = _dequant_block(packed_ref[...], scales_ref[...], zeros_ref[...])
     x = x_ref[...].astype(jnp.float32)  # (bt, bci)
     acc_ref[...] += jax.lax.dot_general(
         x,
@@ -91,6 +97,10 @@ def w4a16_matmul(
 
     x2 = x.reshape(-1, ci)
     t = x2.shape[0]
+    # decode-sized t (< block_t): bt pins to the 8-padded batch, so the token
+    # dim is one grid step with no padding up to block_t, and the jit cache —
+    # keyed on (shape, blocks) — makes steady-state decode compile exactly
+    # once (asserted by test_decode_tiny_t_no_recompile)
     bt = min(block_t, _round_up(t, 8))
     bco = min(block_co, co)
     bci = group  # one quant group per contraction step

@@ -2,7 +2,11 @@
 continuous-batching engine (the paper's vLLM deployment flow).
 
     PYTHONPATH=src python -m repro.launch.serve --arch codellama-7b --smoke \
-        --requests 12 [--no-quant]
+        --requests 12 [--no-quant] [--ptq-artifact DIR]
+
+``--ptq-artifact DIR`` makes boot load-*or*-quantize: the first run saves the
+quantized pytree there; later runs deserialize it and skip calibration + the
+α search entirely (a config change invalidates the artifact via its hash).
 """
 from __future__ import annotations
 
@@ -14,10 +18,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import QuantConfig
-from repro.core.apply import smoothquant_plus
 from repro.core.calibration import synthetic_calibration_set
 from repro.models import api
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, load_or_quantize
 
 
 def main(argv=None):
@@ -31,6 +34,13 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=50.0, help="req/s (Poisson)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--group-size", type=int, default=None)
+    ap.add_argument("--ptq-artifact", default=None,
+                    help="dir for the PTQ artifact: save on first boot, "
+                         "load (skip calibration + alpha search) after")
+    ap.add_argument("--ptq-refresh", action="store_true",
+                    help="force re-quantization even if a matching artifact "
+                         "exists (use after swapping checkpoints — the "
+                         "artifact hash covers configs, not weight values)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV cache page size (tokens)")
     ap.add_argument("--prefill-mode", choices=("bucketed", "slotwise"),
@@ -48,9 +58,17 @@ def main(argv=None):
         gs = args.group_size or (16 if args.smoke else 128)
         calib = synthetic_calibration_set(cfg, n_seqs=2, seq_len=24)
         t0 = time.time()
-        params, rep = smoothquant_plus(params, cfg, calib,
-                                       QuantConfig(group_size=gs))
-        print(f"[quantize-on-load] alpha={rep.alpha:.2f} "
+        from repro.core.apply import ptq_matches
+        qcfg = QuantConfig(group_size=gs)
+        # a present-but-stale artifact still re-quantizes: label the boot by
+        # the path load_or_quantize will actually take
+        loaded = (args.ptq_artifact is not None and not args.ptq_refresh
+                  and ptq_matches(args.ptq_artifact, cfg, qcfg))
+        params, rep = load_or_quantize(params, cfg, calib, qcfg,
+                                       artifact_dir=args.ptq_artifact,
+                                       refresh=args.ptq_refresh)
+        mode = "artifact-load" if loaded else "quantize-on-load"
+        print(f"[{mode}] alpha={rep.alpha:.2f} "
               f"{rep.fp_bytes/1e6:.1f}MB -> {rep.quant_bytes/1e6:.1f}MB "
               f"in {time.time()-t0:.1f}s")
 

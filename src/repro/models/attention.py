@@ -222,12 +222,14 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, jax.Arr
     hkv, dh = cfg.num_kv_heads, cfg.hdim
     if cfg.kv_quant:
         # int8 cache + per-(position, head) scales: halves HBM traffic of the
-        # memory-bound decode step (beyond-paper; weights are already int4)
+        # memory-bound decode step (beyond-paper; weights are already int4).
+        # Scales stay f32 like the page pools', so the contiguous slab and
+        # paged caches hold bit-identical rows under any cfg dtype.
         return {
             "k": jnp.zeros((batch, smax, hkv, dh), jnp.int8),
             "v": jnp.zeros((batch, smax, hkv, dh), jnp.int8),
-            "k_s": jnp.zeros((batch, smax, hkv), cfg.jdtype),
-            "v_s": jnp.zeros((batch, smax, hkv), cfg.jdtype),
+            "k_s": jnp.zeros((batch, smax, hkv), jnp.float32),
+            "v_s": jnp.zeros((batch, smax, hkv), jnp.float32),
             "lens": jnp.zeros((batch,), jnp.int32),
         }
     return {
@@ -430,18 +432,56 @@ def mla_prefill(
 
 
 def _mla_absorb_weights(p, cfg: ModelConfig):
-    """Split ``wkv_b`` into the absorbed key / value projections
-    ``(w_k[r,H,nope], w_v[r,H,vdim])``, dequantizing if needed."""
+    """Split an *fp* ``wkv_b`` into the absorbed key / value projections
+    ``(w_k[r,H,nope], w_v[r,H,vdim])``.
+
+    Quantized params never take this path: PTQ (``core.apply.quantize_params``)
+    derives stacked int4 absorbed projections ``p["wkv_b_absorbed"]`` instead,
+    and :func:`_mla_absorb_q_lat` / :func:`_mla_absorb_out` contract them
+    through the grouped W4A16 kernel — a dense dequantized ``wkv_b`` is never
+    materialized on a serving path."""
     m = cfg.mla
     h = cfg.num_heads
     from repro.core.quantize import QuantizedTensor
-    from repro.core.quantize import dequantize as _deq
 
     wkv_b = p["wkv_b"]["w"]
     if isinstance(wkv_b, QuantizedTensor):
-        wkv_b = _deq(wkv_b, cfg.jdtype)
+        raise TypeError(
+            "quantized MLA decode needs p['wkv_b_absorbed'] (stacked int4 "
+            "absorbed weights from core.apply.quantize_params); wholesale "
+            "dequantization on the serving path is not supported")
     wkv_b = wkv_b.reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
     return wkv_b[..., : m.qk_nope_head_dim], wkv_b[..., m.qk_nope_head_dim :]
+
+
+def _mla_absorb_q_lat(p, q_nope1, cfg: ModelConfig, backend: str) -> jax.Array:
+    """Absorb the query: ``q_lat[b,h,r] = q_nope[b,h,n] · w_k[·]`` — heads
+    ride the grouped kernel's expert grid axis when the weight is int4."""
+    if "wkv_b_absorbed" in p:
+        from repro.kernels import ops as K
+
+        wk_t = p["wkv_b_absorbed"]["wk_t"]               # int4 [H, nope, r]
+        x = q_nope1.astype(jnp.float32).transpose(1, 0, 2)  # [H, B, nope]
+        return K.w4a16_grouped_matmul(x, wk_t, backend=backend).transpose(
+            1, 0, 2)
+    w_k, _ = _mla_absorb_weights(p, cfg)
+    return jnp.einsum(
+        "bhn,rhn->bhr", q_nope1.astype(jnp.float32), w_k.astype(jnp.float32)
+    )
+
+
+def _mla_absorb_out(p, o_lat, cfg: ModelConfig, backend: str) -> jax.Array:
+    """Project latent attention output back: ``out[b,h,v] = o_lat[b,h,r] ·
+    w_v[·]`` — same head-as-expert grouped contraction for int4."""
+    if "wkv_b_absorbed" in p:
+        from repro.kernels import ops as K
+
+        wv = p["wkv_b_absorbed"]["wv"]                   # int4 [H, r, v]
+        x = o_lat.astype(jnp.float32).transpose(1, 0, 2)    # [H, B, r]
+        return K.w4a16_grouped_matmul(x, wv, backend=backend).transpose(
+            1, 0, 2)
+    _, w_v = _mla_absorb_weights(p, cfg)
+    return jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
 
 
 def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
@@ -451,12 +491,8 @@ def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
     m = cfg.mla
     b = q_nope.shape[0]
     h = cfg.num_heads
-    w_k, w_v = _mla_absorb_weights(p, cfg)
 
-    # absorb: q_lat[b,h,r] = q_nope[b,h,n] · w_k[r,h,n]
-    q_lat = jnp.einsum(
-        "bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32), w_k.astype(jnp.float32)
-    )
+    q_lat = _mla_absorb_q_lat(p, q_nope[:, 0], cfg, backend)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     sc = (
         jnp.einsum("bhr,bsr->bhs", q_lat, ckv.astype(jnp.float32))
@@ -467,7 +503,7 @@ def _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg: ModelConfig,
     sc = jnp.where(valid[:, None, :], sc, NEG_INF)
     attn = jax.nn.softmax(sc, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", attn, ckv.astype(jnp.float32))
-    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
+    out = _mla_absorb_out(p, o_lat, cfg, backend)
     return out.reshape(b, 1, h * m.v_head_dim)
 
 
@@ -530,20 +566,16 @@ def mla_decode_paged(
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as K
 
-        w_k, w_v = _mla_absorb_weights(p, cfg)
-        q_lat = jnp.einsum(
-            "bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
-            w_k.astype(jnp.float32),
-        )
+        kernel_backend = "interpret" if impl == "pallas_interpret" else "pallas"
+        q_lat = _mla_absorb_q_lat(p, q_nope[:, 0], cfg, kernel_backend)
         o_lat = K.mla_paged_attention(
             q_lat, q_pe[:, 0], new_pool["ckv"], new_pool["kpe"], table_rows,
             write_pos + 1, new_pool.get("ckv_s"), new_pool.get("kpe_s"),
             sm_scale=scale,
-            backend="interpret" if impl == "pallas_interpret" else "pallas",
+            backend=kernel_backend,
         )
-        out = jnp.einsum(
-            "bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32)
-        ).reshape(b, 1, h * m.v_head_dim)
+        out = _mla_absorb_out(p, o_lat, cfg, kernel_backend).reshape(
+            b, 1, h * m.v_head_dim)
     else:
         ckv = gather_pages(new_pool["ckv"], table_rows)
         kpe = gather_pages(new_pool["kpe"], table_rows)

@@ -530,8 +530,20 @@ def lm_prefill(
         return _lm_head(p, x_last, cfg, backend)[:, 0]
 
     def pad_kv(ct, new):
-        """Write freshly-built prefix cache into the smax-padded slab."""
+        """Write freshly-built prefix cache into the smax-padded slab.
+
+        With ``cfg.kv_quant`` the raw prefix rows are quantized per-(position,
+        head) first — the same :func:`repro.models.attention.kv_quantize_rows`
+        codes + scale rows the paged admission path writes
+        (``quantize_raw_paged``), so the contiguous slab and the page pools
+        agree bit-for-bit instead of casting f32 straight into int8."""
         upd = dict(ct)
+        new = dict(new)
+        if cfg.kv_quant and "k_s" in ct:
+            for key in ("k", "v"):
+                codes, scl = A.kv_quantize_rows(new[key])
+                new[key] = codes
+                new[key + "_s"] = scl
         for key in ct:
             if key == "lens":
                 upd["lens"] = new["lens"]

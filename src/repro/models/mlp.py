@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.quantize import QuantizedTensor
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.sharding import hints as H
 
@@ -65,6 +67,24 @@ def init_moe(key, cfg: ModelConfig) -> Dict[str, Any]:
     if m.num_shared_experts:
         p["shared"] = init_mlp(ks[4], cfg, d_ff=fe * m.num_shared_experts)
     return p
+
+
+def _expert_matmul(x: jax.Array, w, *, backend: str = "auto") -> jax.Array:
+    """Per-expert contraction ``x[nblk, E, C, D] @ w[E, D, F] → [nblk, E, C, F]``
+    in f32.
+
+    ``w`` is either a stacked fp array or (after PTQ) a stacked int4
+    :class:`QuantizedTensor` — the quantized case dispatches through
+    ``kernels.ops.w4a16_grouped_matmul`` (experts ride the Pallas grid; the
+    XLA backend fuses the dequant into the einsum), so packed int4 + scales
+    stay the only resident weight format on the expert path."""
+    nblk, e, c, d = x.shape
+    if isinstance(w, QuantizedTensor):
+        xe = x.astype(jnp.float32).transpose(1, 0, 2, 3).reshape(e, nblk * c, d)
+        y = kops.w4a16_grouped_matmul(xe, w, backend=backend)
+        return y.reshape(e, nblk, c, -1).transpose(1, 0, 2, 3)
+    return jnp.einsum(
+        "becd,edf->becf", x.astype(jnp.float32), w.astype(jnp.float32))
 
 
 def _dispatch_indices(expert_ids: jax.Array, num_experts: int, capacity: int):
@@ -143,18 +163,12 @@ def apply_moe(
     buf = buf.reshape(nblk, m.num_experts, capacity, d)
     buf = H.shard_hint(buf, ("pod", "data"), "model", None, None)
 
-    # expert compute (EP-shardable einsum over stacked weights); expert
-    # weights may be int4-quantized [E, Ci, Co] tensors after PTQ
-    from repro.core.quantize import QuantizedTensor, dequantize
-
-    def _w(e):
-        if isinstance(e, QuantizedTensor):
-            return dequantize(e, jnp.float32)
-        return e.astype(jnp.float32)
-
+    # expert compute (EP-shardable over stacked weights); after PTQ the
+    # stacked [E, Ci, Co] weights are int4 QuantizedTensors and contract
+    # through the grouped W4A16 kernel — never dequantized model-side
     ew = p["experts"]
-    gate_h = jnp.einsum("becd,edf->becf", buf.astype(jnp.float32), _w(ew["gate"]))
-    up_h = jnp.einsum("becd,edf->becf", buf.astype(jnp.float32), _w(ew["up"]))
+    gate_h = _expert_matmul(buf, ew["gate"], backend=backend)
+    up_h = _expert_matmul(buf, ew["up"], backend=backend)
     hidden = jax.nn.silu(gate_h) * up_h
     from repro.core import calibration as _calib
 
@@ -167,7 +181,7 @@ def apply_moe(
         col.record_explicit(
             ("mlp", "experts", "down"), jnp.max(jnp.abs(hidden), axis=(0, 2))
         )
-    out = jnp.einsum("becf,efd->becd", hidden, _w(ew["down"])).astype(x.dtype)
+    out = _expert_matmul(hidden, ew["down"], backend=backend).astype(x.dtype)
 
     # combine (block-local gather, mirroring the dispatch)
     out_flat = out.reshape(nblk, m.num_experts * capacity, d)

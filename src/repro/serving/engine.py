@@ -224,10 +224,51 @@ class ServingEngine:
         return self.stats
 
 
+def load_or_quantize(
+    params_fp,
+    cfg: ModelConfig,
+    calibration_batches,
+    qcfg: QuantConfig = QuantConfig(),
+    *,
+    artifact_dir=None,
+    refresh: bool = False,
+):
+    """Load-*or*-quantize engine boot (quantize once, serve many).
+
+    If ``artifact_dir`` holds a PTQ artifact whose config hash matches
+    ``(cfg, qcfg)``, the quantized pytree + report deserialize straight from
+    disk — zero calibration batches consumed, zero α-search steps.  Otherwise
+    (no artifact, or a stale one from a changed config) the full SmoothQuant+
+    recipe runs on ``params_fp`` and, when ``artifact_dir`` is given, the
+    result is persisted for the next boot.  The hash covers the *configs*,
+    not the weight values — after swapping checkpoints under an unchanged
+    config, pass ``refresh=True`` (CLI: ``--ptq-refresh``) to force
+    re-quantization."""
+    from repro.core import apply as AP
+
+    import zipfile
+
+    if artifact_dir is not None and not refresh and AP.has_ptq(artifact_dir):
+        try:
+            return AP.load_ptq(artifact_dir, cfg, qcfg)
+        except (ValueError, KeyError, OSError, zipfile.BadZipFile):
+            # stale config hash, unknown format version, or a corrupt /
+            # truncated meta.json / arrays.npz: every recoverable-by-
+            # requantizing failure falls through to the full recipe (and
+            # re-saves below) — unless there are no fp params to requantize
+            # from (artifact-only warm boot), where hiding the load error
+            # would just crash later inside calibration
+            if params_fp is None:
+                raise
+    qp, rep = AP.smoothquant_plus(params_fp, cfg, calibration_batches, qcfg)
+    if artifact_dir is not None:
+        AP.save_ptq(artifact_dir, qp, rep, cfg, qcfg)
+    return qp, rep
+
+
 def load_and_quantize(
     params_fp, cfg: ModelConfig, calibration_batches, qcfg: QuantConfig = QuantConfig()
 ):
-    """Quantize-on-load (paper §2.3): FP params in, W4A16 params out."""
-    from repro.core.apply import smoothquant_plus
-
-    return smoothquant_plus(params_fp, cfg, calibration_batches, qcfg)
+    """Quantize-on-load (paper §2.3): FP params in, W4A16 params out.
+    Kept as the artifact-free entry; see :func:`load_or_quantize`."""
+    return load_or_quantize(params_fp, cfg, calibration_batches, qcfg)

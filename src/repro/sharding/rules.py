@@ -14,8 +14,10 @@ Parallelism mapping (see DESIGN.md §5):
   ZeRO optimizer state: extra "data" sharding over the largest divisible dim
 
 Rules are matched by parameter path suffix.  Quantized weights (packed /
-scales / zeros) inherit the fp weight's spec; scales/zeros keep only the
-output-axis sharding because the group axis (Ci/G) is rarely divisible.
+scales / zeros) inherit the fp weight's spec; scales/zeros drop only the
+group-axis (Ci/G) sharding — rarely divisible — and keep the lead axes
+(stacked experts → EP, absorbed MLA heads → TP) and the output axis, so the
+packed/scales/zeros trio is co-sharded everywhere it counts.
 """
 from __future__ import annotations
 
@@ -67,6 +69,10 @@ _RULES = (
     # MLA
     ("mixer/wq_a/w", P(None, None)), ("mixer/wkv_a/w", P(None, None)),
     ("mixer/wq_b/w", P(None, MODEL)), ("mixer/wkv_b/w", P(None, MODEL)),
+    # MLA absorbed-form decode weights (stacked int4 [H, Ci, Co]; heads ride
+    # the lead axis → TP, contraction/group axes stay unsharded)
+    ("wkv_b_absorbed/wk_t", P(MODEL, None, None)),
+    ("wkv_b_absorbed/wv", P(MODEL, None, None)),
     # MoE
     ("experts/gate", P(MODEL, None, None)), ("experts/up", P(MODEL, None, None)),
     ("experts/down", P(MODEL, None, None)),
@@ -104,11 +110,17 @@ def _match(ps: str) -> Optional[P]:
 
 
 def _pad_lead(spec: P, ndim: int, qfield: Optional[str] = None) -> P:
-    """Prepend None for stacked layer dims; adapt for quantized fields."""
+    """Prepend None for stacked layer dims; adapt for quantized fields.
+
+    ``packed`` keeps the fp weight's spec verbatim (its row dim is Ci/2 —
+    divisibility is re-checked against the real leaf shape).  ``scales`` /
+    ``zeros`` drop only the *group-axis* (second-to-last) sharding, which is
+    rarely divisible, and keep every lead axis (layer stack / MoE expert /
+    MLA head → EP/TP) plus the output axis — so the packed/scales/zeros trio
+    stays co-sharded on every axis that matters."""
     base = tuple(spec)
-    if qfield in ("scales", "zeros"):
-        # group axis rarely divisible → keep only output-axis sharding
-        base = (None, base[1] if len(base) > 1 else None)
+    if qfield in ("scales", "zeros") and len(base) >= 2:
+        base = (*base[:-2], None, base[-1])
     lead = ndim - len(base)
     if lead < 0:  # spec longer than leaf ndim (e.g. bias under moe) — trim
         base = base[-ndim:]

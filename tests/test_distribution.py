@@ -73,6 +73,54 @@ def test_quantized_param_specs_follow_fp():
     assert flat["layers/mlp/down/w/scales"] == P(None, None, None)
 
 
+def test_quantized_moe_specs_ep_and_cosharded():
+    """Stacked quantized expert leaves shard the expert dim (EP) and the
+    packed/scales/zeros trio stays co-sharded on every non-group axis."""
+    from repro.core.apply import quantize_params
+
+    cfg = get_config("deepseek-v2-236b")
+    shapes = jax.eval_shape(lambda: api.init_model(jax.random.PRNGKey(0), cfg))
+    qshapes = jax.eval_shape(
+        lambda p: quantize_params(p, cfg, QuantConfig())[0], shapes)
+    specs = rules.param_specs(qshapes, _mesh16(), cfg)
+    flat = _flatten_specs(specs)
+    # experts [L, E, Ci(/2|/G), Co]: E=160 on model (EP); contraction unsharded
+    for leaf in ("gate", "up", "down"):
+        for field in ("packed", "scales", "zeros"):
+            assert flat[f"layers/mlp/experts/{leaf}/{field}"] == P(
+                None, "model", None, None), (leaf, field)
+    # MLA absorbed decode weights [L, H, Ci', Co']: heads on model (TP)
+    for leaf in ("wk_t", "wv"):
+        for field in ("packed", "scales", "zeros"):
+            assert flat[f"layers/mixer/wkv_b_absorbed/{leaf}/{field}"] == P(
+                None, "model", None, None), (leaf, field)
+
+
+def test_quantized_trio_cosharded_everywhere():
+    """Property over ALL quantized leaves: scales/zeros == packed's spec with
+    only the group axis (second-to-last) dropped — never a lead-axis or
+    output-axis divergence (a mis-coshard would misalign dequant groups)."""
+    from repro.core.apply import quantize_params
+
+    for arch in ("deepseek-v2-236b", "mistral-large-123b"):
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda: api.init_model(jax.random.PRNGKey(0), cfg))
+        qshapes = jax.eval_shape(
+            lambda p: quantize_params(p, cfg, QuantConfig())[0], shapes)
+        flat = _flatten_specs(rules.param_specs(qshapes, _mesh16(), cfg))
+        packed = {k[: -len("/packed")]: v for k, v in flat.items()
+                  if k.endswith("/packed")}
+        assert packed, arch
+        for base, pspec in packed.items():
+            for field in ("scales", "zeros"):
+                fspec = flat[f"{base}/{field}"]
+                assert len(fspec) == len(pspec) or not tuple(fspec), base
+                if tuple(fspec):
+                    assert tuple(fspec)[:-2] == tuple(pspec)[:-2], base
+                    assert tuple(fspec)[-1] == tuple(pspec)[-1], base
+
+
 def test_opt_specs_zero_shards_over_data():
     cfg = get_config("llama3.2-3b")
     shapes = jax.eval_shape(lambda: api.init_model(jax.random.PRNGKey(0), cfg))

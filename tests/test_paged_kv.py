@@ -238,6 +238,62 @@ def test_paged_engine_mla_smoke():
         assert r.output == _greedy_ref(params, cfg, r.prompt, r.max_tokens, 32)
 
 
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_int8_prefill_slab_matches_paged_admission(dtype):
+    """ROADMAP closeout: the *contiguous* prefill slab now quantizes per-row
+    (codes + f32 scale rows, matching the page pools' layout) instead of
+    casting — bit-for-bit the same int8 codes the paged admission path
+    (quantize_raw_paged) writes, under any cfg dtype."""
+    cfg = get_config("codellama-7b", smoke=True).with_(
+        dtype=dtype, kv_quant=True)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.arange(3, 12)[None]                      # [1, 9]
+    t = prompt.shape[1]
+    # contiguous slab prefill
+    _, slab = api.prefill_fn(params, {"tokens": prompt}, cfg, 16,
+                             backend="xla")
+    assert slab["layers"]["k"].dtype == jnp.int8
+    # paged-admission reference: raw prefix KV, quantized per row
+    _, raw = api.prefill_fn(params, {"tokens": prompt}, cfg, 16,
+                            backend="xla", raw_cache=True)
+    raw = {"layers": {k: v for k, v in raw["layers"].items() if k != "lens"}}
+    qraw = api.quantize_raw_paged(raw, cfg)
+    for leaf in ("k", "v"):  # int8 codes: bitwise identical
+        np.testing.assert_array_equal(
+            np.asarray(slab["layers"][leaf][:, :, :t]),
+            np.asarray(qraw["layers"][leaf]))
+    for leaf in ("k_s", "v_s"):  # f32 scales: same rows modulo XLA fusion ulps
+        np.testing.assert_allclose(
+            np.asarray(slab["layers"][leaf][:, :, :t]),
+            np.asarray(qraw["layers"][leaf]), rtol=1e-6, atol=0)
+    # and decode off that slab works end to end
+    lg, _ = api.decode_fn(
+        params, {"token": jnp.asarray([[5]], jnp.int32),
+                 "position": jnp.asarray([t], jnp.int32)},
+        slab, cfg, backend="xla")
+    assert bool(jnp.isfinite(lg.astype(jnp.float32)).all())
+
+
+def test_int8_engine_greedy_matches_contiguous_reference():
+    """With kv_quant on, the paged engine and the contiguous-slab greedy
+    reference see identical int8 codes+scales → identical tokens."""
+    cfg = get_config("codellama-7b", smoke=True).with_(
+        dtype="float32", kv_quant=True)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i, prompt=rng.integers(2, cfg.vocab_size,
+                                               size=(5, 9)[i % 2]).astype(np.int32),
+                    max_tokens=4) for i in range(3)]
+    eng = ServingEngine(params, cfg, batch_size=2, max_seq=32, page_size=8,
+                        backend="xla")
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.completed == 3
+    for r in reqs:
+        assert r.output == _greedy_ref(params, cfg, r.prompt, r.max_tokens, 32)
+
+
 def test_paged_unsupported_families_raise():
     cfg = get_config("rwkv6-7b", smoke=True)
     params = api.init_model(jax.random.PRNGKey(0), cfg)

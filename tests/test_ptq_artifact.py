@@ -1,0 +1,133 @@
+"""PTQ artifact (quantize-once / serve-many): npz round trip with uint8
+packed leaves intact, config-hash staleness guard, and engine boot from the
+artifact with ZERO calibration batches + zero α-search steps producing
+greedy tokens identical to quantize-on-load."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import QuantConfig
+from repro.core import apply as AP
+from repro.core import calibration as C
+from repro.core.quantize import QuantizedTensor
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine, load_or_quantize
+
+
+@pytest.fixture(scope="module")
+def quantized(tmp_path_factory):
+    cfg = get_config("deepseek-v2-236b", smoke=True).with_(dtype="float32")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    batches = C.synthetic_calibration_set(cfg, n_seqs=1, seq_len=12)
+    qcfg = QuantConfig(group_size=16)
+    art = tmp_path_factory.mktemp("ptq") / "artifact"
+    qp, rep = load_or_quantize(params, cfg, batches, qcfg,
+                               artifact_dir=art)
+    return cfg, qcfg, qp, rep, art
+
+
+def _poison_calibration():
+    """Iterable that fails the test if the engine boot consumes ANY batch."""
+    raise AssertionError("artifact boot ran calibration")
+    yield  # pragma: no cover
+
+
+def test_artifact_round_trip_bit_exact(quantized):
+    cfg, qcfg, qp, rep, art = quantized
+    qp2, rep2 = AP.load_ptq(art, cfg, qcfg)
+    flat1 = jax.tree_util.tree_flatten_with_path(qp)[0]
+    flat2 = {jax.tree_util.keystr(p): l
+             for p, l in jax.tree_util.tree_flatten_with_path(qp2)[0]}
+    assert len(flat1) == len(flat2)
+    for path, leaf in flat1:
+        other = flat2[jax.tree_util.keystr(path)]
+        assert leaf.dtype == other.dtype, path
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(other))
+    # packed int4 codes survive as uint8, scales keep their dtype
+    mixer0 = qp2["layers"]["mixer"]
+    assert isinstance(mixer0["wkv_b"]["w"], QuantizedTensor)
+    assert mixer0["wkv_b"]["w"].packed.dtype == jnp.uint8
+    assert isinstance(mixer0["wkv_b_absorbed"]["wk_t"], QuantizedTensor)
+    # report rides along
+    assert rep2.alpha == rep.alpha
+    assert rep2.loss_curve == rep.loss_curve
+    assert rep2.quantized_paths == [tuple(map(str, p))
+                                    for p in rep.quantized_paths]
+
+
+def test_artifact_boot_zero_calibration_greedy_identical(quantized):
+    """Acceptance: engine boot from the artifact runs zero calibration
+    batches / zero α-search steps and serves token-identical output."""
+    cfg, qcfg, qp, _, art = quantized
+    qp2, _ = load_or_quantize(None, cfg, _poison_calibration(), qcfg,
+                              artifact_dir=art)
+
+    def greedy(p):
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(p, cfg, batch_size=2, max_seq=32, backend="xla")
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=(5, 8)[i % 2]).astype(np.int32),
+                        max_tokens=4) for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return [r.output for r in reqs]
+
+    assert greedy(qp2) == greedy(qp)
+
+
+def test_stale_artifact_rejected_and_requantized(quantized, tmp_path):
+    cfg, qcfg, qp, _, art = quantized
+    other = dataclasses.replace(qcfg, alpha=0.5)
+    with pytest.raises(AP.StalePTQArtifactError):
+        AP.load_ptq(art, cfg, other)
+    # load_or_quantize falls back to a fresh quantization run
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    batches = C.synthetic_calibration_set(cfg, n_seqs=1, seq_len=12)
+    qp3, _ = load_or_quantize(params, cfg, batches, other,
+                              artifact_dir=tmp_path / "art2")
+    assert AP.has_ptq(tmp_path / "art2")
+
+
+def test_fingerprint_sensitive_to_configs():
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    q16, q32 = QuantConfig(group_size=16), QuantConfig(group_size=32)
+    assert AP.ptq_fingerprint(cfg, q16) != AP.ptq_fingerprint(cfg, q32)
+    assert AP.ptq_fingerprint(cfg, q16) != AP.ptq_fingerprint(
+        cfg.with_(dtype="float32"), q16)
+    assert AP.ptq_fingerprint(cfg, q16) == AP.ptq_fingerprint(cfg, q16)
+
+
+@pytest.mark.parametrize("victim,garbage", [
+    ("meta.json", b"{ truncated"),
+    ("arrays.npz", b"not a zip at all"),          # BadZipFile path
+])
+def test_corrupt_artifact_falls_back_to_requantize(quantized, tmp_path,
+                                                   victim, garbage):
+    """A truncated/corrupt artifact (either file) must not crash boot:
+    load_or_quantize re-runs the recipe and re-saves a valid artifact."""
+    cfg, qcfg, qp, rep, _ = quantized
+    art = tmp_path / "corrupt"
+    AP.save_ptq(art, qp, rep, cfg, qcfg)
+    (art / victim).write_bytes(garbage)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    batches = C.synthetic_calibration_set(cfg, n_seqs=1, seq_len=12)
+    qp2, _ = load_or_quantize(params, cfg, batches, qcfg, artifact_dir=art)
+    AP.load_ptq(art, cfg, qcfg)                   # valid again
+
+
+def test_artifact_save_is_atomic(quantized, tmp_path):
+    """A half-written tmp dir is never visible as an artifact."""
+    cfg, qcfg, qp, rep, _ = quantized
+    target = tmp_path / "atomic"
+    AP.save_ptq(target, qp, rep, cfg, qcfg)
+    assert AP.has_ptq(target)
+    assert not (tmp_path / "atomic.tmp").exists()
+    # overwrite in place keeps a loadable artifact
+    AP.save_ptq(target, qp, rep, cfg, qcfg)
+    AP.load_ptq(target, cfg, qcfg)
