@@ -47,6 +47,12 @@ def main(argv=None):
                     default="bucketed")
     ap.add_argument("--max-prefill-tokens", type=int, default=None,
                     help="padded-token budget per engine step (chunked prefill)")
+    ap.add_argument("--reservation", choices=("lazy", "worstcase"),
+                    default="lazy",
+                    help="page reservation: lazy growth + preemption "
+                         "(default) or up-front prompt+max_tokens pages")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: worst case + trash)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -75,8 +81,10 @@ def main(argv=None):
     eng = ServingEngine(params, cfg, batch_size=args.batch_size,
                         max_seq=args.max_seq, backend="xla",
                         page_size=args.page_size,
+                        num_pages=args.num_pages,
                         prefill_mode=args.prefill_mode,
-                        max_prefill_tokens=args.max_prefill_tokens)
+                        max_prefill_tokens=args.max_prefill_tokens,
+                        reservation=args.reservation)
     rng = np.random.default_rng(0)
     arrive = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [Request(uid=i,
@@ -93,6 +101,11 @@ def main(argv=None):
     print(f"served {stats.completed}/{args.requests} requests, "
           f"{stats.decoded_tokens} tokens in {dt:.2f}s  "
           f"({stats.decoded_tokens/dt:.1f} tok/s, {lat*1e3:.1f} ms/token)")
+    print(f"pager: peak concurrency {stats.max_active}/{args.batch_size}, "
+          f"{stats.grown_pages} pages grown lazily, "
+          f"{stats.preemptions} preemptions "
+          f"({stats.swapped_out_bytes/1e6:.1f}MB swapped out, "
+          f"{stats.swapped_in_bytes/1e6:.1f}MB back in)")
 
 
 if __name__ == "__main__":

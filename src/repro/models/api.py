@@ -19,6 +19,7 @@ Batch dicts:
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -110,6 +111,31 @@ def quantize_raw_paged(raw, cfg: ModelConfig):
     """Quantize raw prefill KV to match int8 page pools (no-op unless
     ``cfg.kv_quant``); run before ``serving.kv_cache.write_prefix``."""
     return LM.quantize_raw_paged(raw, cfg)
+
+
+@jax.jit
+def gather_pool_rows(pools, pages: jax.Array):
+    """Gather whole pool pages for a slot swap-out.
+
+    ``pools`` leaves are ``[L, num_pages, page_size, ...]`` (any dtype — fp16
+    K/V, MLA latents, int8 codes and their f32 ``*_s`` scale leaves alike);
+    ``pages[n]`` are the pool page ids the slot owns.  Returns the matching
+    ``[L, n, page_size, ...]`` tree, ready for ``jax.device_get`` into a host
+    swap buffer.  jit re-specializes per page count; preemption is rare, so
+    the handful of traces is cheap."""
+    return jax.tree.map(lambda leaf: leaf[:, pages], pools)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_pool_rows(pools, rows, pages: jax.Array):
+    """Inverse of :func:`gather_pool_rows`: write swapped-out rows back into
+    freshly allocated pool pages (swap-in).  ``rows`` leaves are
+    ``[L, n, page_size, ...]``; dtypes already match the pools bit-for-bit
+    (the swap buffer stores raw codes + scales, never dequantized copies), so
+    a resumed slot's cache is exactly what it was when preempted."""
+    return jax.tree.map(
+        lambda leaf, r: leaf.at[:, pages].set(r.astype(leaf.dtype)),
+        pools, rows)
 
 
 def decode_paged_fn(params, batch, cache, table_rows, cfg: ModelConfig, *,

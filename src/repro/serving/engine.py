@@ -19,7 +19,19 @@ from a fixed-slot continuous batcher backed by a **paged KV cache**:
 - with ``cfg.kv_quant`` the pools are int8 + per-row f32 scales: prefix rows
   are quantized on admission, decode tokens before their pool write;
 - finished slots free their pages immediately and are refilled from the
-  queue — no head-of-line blocking, the continuous-batching win.
+  queue — no head-of-line blocking, the continuous-batching win;
+- **lazy page growth** (default): admission reserves only the pages covering
+  the prompt + 1 decode token; the decode loop grows a slot's page table
+  exactly when its write position crosses a page boundary, so pool occupancy
+  tracks *live* tokens and concurrency is bounded by real memory, not the
+  worst case (the single-A100 deployment headline of the paper).  On pool
+  exhaustion the engine **preempts** the youngest active slot(s): their live
+  pool rows are swapped to a host buffer (raw codes + scales, bit-exact) and
+  the request requeues at the *queue head* (FCFS preserved); it resumes by
+  swap-in — page realloc + row scatter — never by re-prefilling.  An
+  admission watermark (one free page per decoding slot) keeps preemption a
+  rare pressure-relief valve.  ``reservation="worstcase"`` restores the old
+  up-front ``prompt + max_tokens`` reservation as the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -45,11 +57,25 @@ class Request:
     prompt: np.ndarray            # [T] int32
     max_tokens: int = 16
     temperature: float = 0.0
+    top_k: int = 0                # 0 disables (per-request, incl. first token)
+    top_p: float = 1.0            # 1.0 disables
     arrival_t: float = 0.0
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    submit_seq: int = -1          # FCFS age; youngest (max) is preempted first
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """Host-side image of a preempted slot: everything needed to resume it
+    bit-exactly without re-prefilling."""
+    rows: Any                     # np pytree [L, n_pages, PS, ...] per leaf
+    n_pages: int                  # pages owned at swap-out
+    pos: int                      # next write position
+    last_tok: int                 # token feeding the next decode step
+    nbytes: int                   # swap buffer size (stats)
 
 
 @dataclasses.dataclass
@@ -59,6 +85,14 @@ class EngineStats:
     steps: int = 0
     completed: int = 0
     prefill_batches: int = 0      # joint prefill launches (≤ admitted reqs)
+    preemptions: int = 0          # slots swapped out under pool pressure
+    resumes: int = 0              # swapped slots re-admitted (swap-in)
+    grown_pages: int = 0          # pages added by lazy decode growth
+    swapped_out_bytes: int = 0    # pool bytes copied device -> host
+    swapped_in_bytes: int = 0     # pool bytes copied host -> device
+    idle_steps: int = 0           # drain iterations with nothing decodable
+    max_active: int = 0           # peak concurrent decoding slots
+    active_slot_steps: int = 0    # sum of active slots over steps (mean = /steps)
 
 
 class ServingEngine:
@@ -76,6 +110,7 @@ class ServingEngine:
         seed: int = 0,
         max_prefill_tokens: Optional[int] = None,
         prefill_mode: str = "bucketed",
+        reservation: str = "lazy",
     ):
         ok, why = api.paged_supported(cfg)
         if not ok:
@@ -100,15 +135,18 @@ class ServingEngine:
                 f"({self.P} pages of {page_size} tokens + trash page)")
         self.pager = KV.PagePool(num_pages, page_size, batch_size, self.P)
         self.pools = api.init_paged_cache(cfg, num_pages, page_size)
+        self.reservation = reservation
         self.sched = Scheduler(page_size=page_size, max_seq=self.S,
                                max_prefill_tokens=max_prefill_tokens,
-                               mode=prefill_mode)
+                               mode=prefill_mode, reservation=reservation)
 
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.pos = np.zeros(batch_size, np.int32)      # next position per slot
         self.last_tok = np.zeros(batch_size, np.int32)
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
+        self._swapped: dict[int, _SwapState] = {}   # submit_seq -> swap image
+        self._next_seq = 0                             # FCFS submission clock
 
         # donate the pools: the step's output cache aliases the input buffers
         # instead of allocating a second full pool every decoded token
@@ -136,13 +174,101 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds max_seq-1={self.S - 1}")
         req.arrival_t = req.arrival_t or time.perf_counter()
+        req.submit_seq = self._next_seq
+        self._next_seq += 1
         self.queue.append(req)
+
+    def _active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def _sample_reqs(self, logits, sk, temps, reqs):
+        """Per-row sampling for a list of Requests (None for idle rows).
+        The per-row top-k/top-p arrays are only passed when some request in
+        the batch actually filters; the all-default call hits
+        ``sample_per_slot``'s static fast path, keeping the two full-vocab
+        sorts out of the compiled greedy/temperature-only decode step."""
+        if not any(r is not None and (r.top_k or r.top_p < 1.0) for r in reqs):
+            return self._sample(logits, sk, temps)
+        tks = jnp.asarray([r.top_k if r else 0 for r in reqs], jnp.int32)
+        tps = jnp.asarray([r.top_p if r else 1.0 for r in reqs], jnp.float32)
+        return self._sample(logits, sk, temps, tks, tps)
+
+    # ---------------------------------------------------- swap-out / -in ---
+    def _preempt(self, slot: int) -> None:
+        """Swap ``slot`` out to host memory and requeue its request at the
+        queue *head* (it was admitted before anything still queued, so FCFS
+        order is preserved).  The swap buffer holds the slot's live pool rows
+        verbatim — fp16 K/V or int8 codes + f32 scale leaves — so resume is
+        bit-exact and preemption is a pure scheduling effect."""
+        req = self.slots[slot]
+        pages = self.pager.slot_pages(slot)
+        rows = jax.device_get(
+            api.gather_pool_rows(self.pools, jnp.asarray(pages, jnp.int32)))
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(rows))
+        self._swapped[req.submit_seq] = _SwapState(
+            rows=rows, n_pages=len(pages), pos=int(self.pos[slot]),
+            last_tok=int(self.last_tok[slot]), nbytes=nbytes)
+        self.queue.appendleft(req)
+        self.pager.free_slot(slot)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self.stats.preemptions += 1
+        self.stats.swapped_out_bytes += nbytes
+
+    def _resume(self, slot: int, req: Request) -> None:
+        """Swap a preempted request back in: realloc its page count, scatter
+        the host rows into the fresh pages, restore the decode cursor."""
+        st = self._swapped.pop(req.submit_seq)
+        self.pager.alloc(slot, st.n_pages)
+        self.pools = api.scatter_pool_rows(
+            self.pools, st.rows,
+            jnp.asarray(self.pager.slot_pages(slot), jnp.int32))
+        self.slots[slot] = req
+        self.pos[slot] = st.pos
+        self.last_tok[slot] = st.last_tok
+        self.stats.resumes += 1
+        self.stats.swapped_in_bytes += st.nbytes
+
+    def _ensure_pages(self) -> None:
+        """Lazy growth: every active slot must own the pages covering its next
+        write position before the decode step runs.  Oldest slots are grown
+        first; on pool exhaustion the *youngest* active slot is preempted
+        (repeatedly, until the grow fits) — possibly the growing slot itself,
+        which then simply leaves the batch until pages free up."""
+        if self.reservation != "lazy":
+            return                     # worst-case reservation never grows
+        for i in sorted(self._active_slots(),
+                        key=lambda j: self.slots[j].submit_seq):
+            while self.slots[i] is not None:
+                need = int(self.pos[i]) // self.PS + 1
+                if len(self.pager.slot_pages(i)) >= need:
+                    break
+                if self.pager.can_alloc(1):
+                    self.pager.grow(i, 1)
+                    self.stats.grown_pages += 1
+                else:
+                    victim = max(self._active_slots(),
+                                 key=lambda j: self.slots[j].submit_seq)
+                    self._preempt(victim)
 
     def _admit(self):
         free = [i for i, s in enumerate(self.slots) if s is None]
+        # preempted requests sit at the queue head (FCFS); resume them by
+        # swap-in before planning fresh prefills — and if the head can't be
+        # resumed yet, nothing behind it may jump the line
+        while self.queue and self.queue[0].submit_seq in self._swapped:
+            if not free:
+                return
+            st = self._swapped[self.queue[0].submit_seq]
+            reserve = self.B - len(free)          # watermark: active slots
+            if not self.pager.can_alloc(st.n_pages + reserve):
+                return
+            self._resume(free.pop(0), self.queue.popleft())
         if not free or not self.queue:
             return
-        for bkt in self.sched.plan(self.queue, free, self.pager):
+        reserve = (self.B - len(free)) if self.reservation == "lazy" else 0
+        for bkt in self.sched.plan(self.queue, free, self.pager, reserve):
             n, blen = len(bkt.reqs), bkt.pad_len
             toks = np.zeros((n, blen), np.int32)
             lens = np.empty(n, np.int32)
@@ -162,7 +288,7 @@ class ServingEngine:
                 self.pools, raw, jnp.asarray(page), jnp.asarray(off))
             self.key, sk = jax.random.split(self.key)
             temps = jnp.asarray([r.temperature for r in bkt.reqs], jnp.float32)
-            firsts = np.asarray(self._sample(logits, sk, temps))
+            firsts = np.asarray(self._sample_reqs(logits, sk, temps, bkt.reqs))
             now = time.perf_counter()
             for r, (slot, req) in enumerate(zip(bkt.slots, bkt.reqs)):
                 first = int(firsts[r])
@@ -176,10 +302,11 @@ class ServingEngine:
 
     # -------------------------------------------------------------- step ---
     def step(self) -> int:
-        """Admit waiting requests, decode one token for all active slots.
-        Returns number of active slots."""
+        """Admit waiting requests, grow/preempt page tables as needed, decode
+        one token for all active slots.  Returns number of active slots."""
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        self._ensure_pages()
+        active = self._active_slots()
         if not active:
             return 0
         # use-after-free tripwire: no active slot may point at the trash page
@@ -195,8 +322,10 @@ class ServingEngine:
             self.slots[i].temperature if self.slots[i] else 0.0
             for i in range(self.B)
         ], jnp.float32)
-        nxt = np.asarray(self._sample(logits, sk, temps))
+        nxt = np.asarray(self._sample_reqs(logits, sk, temps, self.slots))
         self.stats.steps += 1
+        self.stats.max_active = max(self.stats.max_active, len(active))
+        self.stats.active_slot_steps += len(active)
         for i in active:
             req = self.slots[i]
             t = int(nxt[i])
@@ -206,7 +335,11 @@ class ServingEngine:
             self.stats.decoded_tokens += 1
             hit_len = len(req.output) >= req.max_tokens
             hit_eos = t == self.eos
-            hit_cap = self.pos[i] >= self.S - 1
+            # pos is the *next* write position; all S cache rows (0..S-1) are
+            # writable, so the cap trips only at pos == S.  (`>= S - 1` here
+            # was an off-by-one that left the last pool row of a max-length
+            # request unwritten and cost it one token of budget.)
+            hit_cap = self.pos[i] >= self.S
             if hit_len or hit_eos or hit_cap:
                 req.done_t = time.perf_counter()
                 self.stats.completed += 1
@@ -217,10 +350,33 @@ class ServingEngine:
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
+        """Step until queue and slots are empty.  ``max_steps`` bounds *all*
+        iterations, idle ones included.  An iteration that decodes nothing
+        while requests still wait means admission is stalled — the drain is
+        single-threaded and deterministic, so no later iteration could do
+        better — and raises immediately, naming the blocked head, instead of
+        spinning to the ceiling (``stats.steps`` only counts decoding steps,
+        so the old guard never tripped on an admission stall)."""
+        iters = 0
         while (self.queue or any(s is not None for s in self.slots)):
-            if self.stats.steps >= max_steps:
+            if iters >= max_steps:
                 break
-            self.step()
+            iters += 1
+            if self.step() == 0 and self.queue:
+                self.stats.idle_steps += 1
+                head = self.queue[0]
+                swapped = head.submit_seq in self._swapped
+                need = (self._swapped[head.submit_seq].n_pages if swapped
+                        else self.sched.pages_needed(head, self.pager))
+                free_slots = sum(s is None for s in self.slots)
+                raise RuntimeError(
+                    f"admission stalled: queue head request uid={head.uid} "
+                    f"(prompt {len(head.prompt)} tokens, "
+                    f"{'swapped-out, ' if swapped else ''}"
+                    f"needs {need} pages) cannot be admitted with "
+                    f"free_pages={self.pager.free_pages}/"
+                    f"{self.pager.num_pages - 1}, free_slots={free_slots}/"
+                    f"{self.B}, and no active slot can unblock it")
         return self.stats
 
 

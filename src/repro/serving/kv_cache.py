@@ -72,15 +72,25 @@ class PagePool:
         """Give ``slot`` ``n`` pages.  The slot must currently own none."""
         if self._slot_pages[slot]:
             raise RuntimeError(f"slot {slot} already owns pages")
-        if n > self.max_pages_per_slot:
+        return self.grow(slot, n)
+
+    def grow(self, slot: int, n: int = 1) -> List[int]:
+        """Append ``n`` pages to ``slot`` (which may already own some).
+
+        This is what lazy decode growth calls when a slot's write position
+        crosses a page boundary: the new pages extend the slot's page-table
+        prefix, so already-written logical positions keep their mapping.
+        """
+        owned = len(self._slot_pages[slot])
+        if owned + n > self.max_pages_per_slot:
             raise ValueError(
-                f"request needs {n} pages > max_pages_per_slot="
-                f"{self.max_pages_per_slot}")
+                f"slot {slot} would own {owned + n} pages > "
+                f"max_pages_per_slot={self.max_pages_per_slot}")
         if n > len(self._free):
             raise RuntimeError(f"out of pages: need {n}, free {len(self._free)}")
         pages = [self._free.pop() for _ in range(n)]
-        self._slot_pages[slot] = pages
-        self._table[slot, :n] = pages
+        self._slot_pages[slot].extend(pages)
+        self._table[slot, owned : owned + n] = pages
         return pages
 
     def free_slot(self, slot: int) -> None:

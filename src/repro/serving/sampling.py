@@ -3,20 +3,42 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def _filter_top_k_top_p(logits: jax.Array, top_k: int, top_p: float) -> jax.Array:
-    """Mask logits outside the top-k / nucleus-p set with -inf."""
-    if top_k and top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    if top_p < 1.0:
-        srt = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(srt, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
-        cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+def _filter_top_k_top_p(logits: jax.Array, top_k, top_p) -> jax.Array:
+    """Mask logits outside the top-k / nucleus-p set with -inf.
+
+    ``top_k`` / ``top_p`` may be scalars or per-row ``[B]`` arrays (mixed
+    per-request settings in one batched call); ``top_k=0`` and ``top_p=1.0``
+    disable the respective filter for that row.  Top-p is computed over the
+    top-k-masked distribution (nucleus within the top-k set), matching the
+    scalar semantics this function always had.
+    """
+    # statically-disabled fast path: concrete 0 / 1.0 (the defaults) compile
+    # to an identity, keeping the two O(B·V·logV) sorts out of decode steps
+    # whose batch uses no filtering (the engine only passes [B] arrays when
+    # some active request actually sets top_k/top_p)
+    if (isinstance(top_k, (int, np.integer)) and top_k == 0
+            and isinstance(top_p, (int, float, np.floating)) and top_p >= 1.0):
+        return logits
+    b, v = logits.shape
+    top_k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (b,))
+    top_p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+
+    k = jnp.clip(top_k, 0, v)
+    kth = jnp.take_along_axis(
+        jnp.sort(logits, axis=-1)[:, ::-1],          # descending
+        jnp.maximum(k, 1)[:, None] - 1, axis=-1)     # k-th largest per row
+    logits = jnp.where((k[:, None] > 0) & (logits < kth), -1e30, logits)
+
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.minimum(jnp.sum(cum < top_p[:, None], axis=-1), v - 1)
+    cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
+    logits = jnp.where((top_p[:, None] < 1.0) & (logits < cutoff), -1e30,
+                       logits)
     return logits
 
 
@@ -40,16 +62,15 @@ def sample_per_slot(
     logits: jax.Array,          # [B, V]
     key: jax.Array,
     temperatures: jax.Array,    # [B] f32; rows with t<=0 decode greedily
-    *,
-    top_k: int = 0,
-    top_p: float = 1.0,
+    top_k=0,                    # int or [B] int32; 0 disables
+    top_p=1.0,                  # float or [B] f32; 1.0 disables
 ) -> jax.Array:
-    """Vectorized sampling with a *per-row* temperature.
+    """Vectorized sampling with *per-row* temperature / top-k / top-p.
 
     One batched call serves mixed greedy/stochastic requests: row ``b`` is
     ``argmax`` when ``temperatures[b] <= 0`` and a categorical draw at its own
-    temperature otherwise (the seed engine wrongly applied the batch-max
-    temperature to every slot).
+    temperature — filtered by its own top-k / nucleus-p — otherwise (the seed
+    engine wrongly applied the batch-max temperature to every slot).
     """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = jnp.where(temperatures > 0, temperatures, 1.0).astype(jnp.float32)

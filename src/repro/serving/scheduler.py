@@ -13,6 +13,22 @@ enough free pages exist; nothing behind it jumps ahead (no starvation).  A
 engine step — oversized backlogs are drained in chunks across steps so decode
 latency of in-flight requests stays bounded.
 
+**Page reservation** (``reservation=``): ``"lazy"`` (default) reserves only
+the pages covering the prompt plus one decode token — the engine grows the
+page table during decode and preempts on pool pressure, so pool occupancy
+tracks *live* tokens and concurrency is bounded by real memory, not by the
+worst case.  ``"worstcase"`` reserves ``prompt + max_tokens`` pages up front
+(no growth or preemption ever needed) — kept as the benchmark baseline the
+paper's single-A100 deployment story argues against.
+
+**Watermark**: under lazy reservation the head is admitted only while
+``free_pages >= need + reserve``, where ``reserve`` starts at the number of
+already-decoding slots (passed by the engine) and rises by one per admitted
+request.  Each live slot thus keeps about one page of growth headroom, so
+preemption is the rare pressure-relief valve, not a steady-state tax.  The
+reserve is waived when nothing is active (``reserve=0``) so an empty engine
+can always admit its head and never deadlocks on its own watermark.
+
 ``mode="slotwise"`` degenerates to one request per bucket at its exact prompt
 length — the seed engine's prefill strategy — kept as the benchmark baseline.
 """
@@ -36,13 +52,16 @@ class PrefillBucket:
 class Scheduler:
     def __init__(self, *, page_size: int, max_seq: int,
                  max_prefill_tokens: Optional[int] = None,
-                 mode: str = "bucketed"):
+                 mode: str = "bucketed", reservation: str = "lazy"):
         if mode not in ("bucketed", "slotwise"):
             raise ValueError(f"unknown prefill mode {mode!r}")
+        if reservation not in ("lazy", "worstcase"):
+            raise ValueError(f"unknown page reservation {reservation!r}")
         self.page_size = page_size
         self.max_seq = max_seq
         self.max_prefill_tokens = max_prefill_tokens
         self.mode = mode
+        self.reservation = reservation
 
     def bucket_len(self, prompt_len: int) -> int:
         b = self.page_size
@@ -51,15 +70,23 @@ class Scheduler:
         return min(b, self.max_seq)
 
     def pages_needed(self, req, pool: PagePool) -> int:
-        want = min(len(req.prompt) + req.max_tokens, self.max_seq)
+        if self.reservation == "worstcase":
+            want = min(len(req.prompt) + req.max_tokens, self.max_seq)
+        else:
+            # lazy: cover the prompt plus the first decode write only; the
+            # engine grows the table page-by-page as decode proceeds
+            want = min(len(req.prompt) + 1, self.max_seq)
         return pool.pages_needed(want)
 
-    def plan(self, queue: Deque, free_slots: List[int],
-             pool: PagePool) -> List[PrefillBucket]:
+    def plan(self, queue: Deque, free_slots: List[int], pool: PagePool,
+             reserve: int = 0) -> List[PrefillBucket]:
         """Pop admissible requests off ``queue`` and bucket them.
 
         Reserves pages in ``pool`` for every admitted request (so a later
         bucket in the same step can't oversubscribe) and assigns slots.
+        ``reserve`` is the admission watermark: free pages that must remain
+        after each admit (one growth page per decoding slot — the engine
+        passes its active-slot count, and each admission here adds one).
         """
         slots = deque(free_slots)
         budget = self.max_prefill_tokens
@@ -68,7 +95,7 @@ class Scheduler:
         while queue and slots:
             req = queue[0]
             need = self.pages_needed(req, pool)
-            if not pool.can_alloc(need):
+            if not pool.can_alloc(need + reserve):
                 break                       # FCFS: head blocks the line
             blen = (len(req.prompt) if self.mode == "slotwise"
                     else self.bucket_len(len(req.prompt)))
@@ -77,6 +104,8 @@ class Scheduler:
             queue.popleft()
             slot = slots.popleft()
             pool.alloc(slot, need)
+            if self.reservation == "lazy":
+                reserve += 1                # growth headroom for the new slot
             key = blen if self.mode == "bucketed" else (blen, slot)
             bkt = buckets.get(key)
             if bkt is None:
