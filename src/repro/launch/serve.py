@@ -53,6 +53,13 @@ def main(argv=None):
                          "(default) or up-front prompt+max_tokens pages")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="KV pool size in pages (default: worst case + trash)")
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="on",
+                    help="shared-prefix KV cache: block-hash reuse of full "
+                         "prompt pages + suffix-only prefill (default on)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every synthetic request this many identical "
+                         "leading prompt tokens (a shared system prompt) so "
+                         "the prefix cache has something to hit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -84,11 +91,16 @@ def main(argv=None):
                         num_pages=args.num_pages,
                         prefill_mode=args.prefill_mode,
                         max_prefill_tokens=args.max_prefill_tokens,
-                        reservation=args.reservation)
+                        reservation=args.reservation,
+                        prefix_cache=args.prefix_cache == "on")
     rng = np.random.default_rng(0)
     arrive = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    sys_p = rng.integers(2, cfg.vocab_size,
+                         args.shared_prefix_len).astype(np.int32)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(2, cfg.vocab_size, 10).astype(np.int32),
+                    prompt=np.concatenate(
+                        [sys_p,
+                         rng.integers(2, cfg.vocab_size, 10).astype(np.int32)]),
                     max_tokens=args.max_tokens, arrival_t=float(arrive[i]))
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -106,6 +118,15 @@ def main(argv=None):
           f"{stats.preemptions} preemptions "
           f"({stats.swapped_out_bytes/1e6:.1f}MB swapped out, "
           f"{stats.swapped_in_bytes/1e6:.1f}MB back in)")
+    if args.prefix_cache == "on":
+        hit = stats.prefix_hits / max(stats.admitted, 1)
+        print(f"prefix-cache: hit-rate {hit:.0%} "
+              f"({stats.prefix_hits}/{stats.admitted} admissions, "
+              f"{stats.prefix_matched_tokens} prompt tokens served from "
+              f"cache), {stats.pages_shared} pages shared, "
+              f"{stats.pages_inserted} inserted, "
+              f"{stats.pages_evicted} evicted, "
+              f"{stats.cow_copies} copy-on-writes")
 
 
 if __name__ == "__main__":

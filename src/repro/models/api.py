@@ -138,6 +138,34 @@ def scatter_pool_rows(pools, rows, pages: jax.Array):
         pools, rows)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_pool_page(pools, src: jax.Array, dst: jax.Array):
+    """Copy-on-write helper: duplicate pool page(s) ``src`` into ``dst``
+    across every leaf (codes and scale pools alike), in place (pools
+    donated).  ``src``/``dst`` are int32 scalars or matching ``[n]`` arrays
+    (one dispatch covers a whole admission plan's COW set; destinations are
+    distinct fresh pages, so the scatter never collides).  The pager's
+    ``PagePool.cow`` picks the pages; this moves the device rows so a slot
+    gets a private, bit-identical copy of a shared page before writing into
+    it."""
+    return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pools)
+
+
+def prefill_paged_fn(params, batch, cache, table_rows, prefix_len,
+                     cfg: ModelConfig, *, backend: str = "auto",
+                     last_idx=None):
+    """Suffix-only prefill against cached prefix pages (shared-prefix KV
+    cache): only the uncached tail rides through the transformer; attention
+    reads positions ``< prefix_len[b]`` from the pools via ``table_rows``.
+    Returns (per-row last-token logits, raw suffix KV for the page scatter).
+    """
+    if cfg.encdec:
+        raise NotImplementedError("paged prefill is decoder-only")
+    return LM.lm_prefill_paged(params, batch["tokens"], cache, prefix_len,
+                               table_rows, cfg, backend=backend,
+                               last_idx=last_idx, **_lm_kw(batch))
+
+
 def decode_paged_fn(params, batch, cache, table_rows, cfg: ModelConfig, *,
                     backend: str = "auto"):
     """One decode step against paged pools; ``table_rows[B, P]`` maps each

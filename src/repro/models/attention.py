@@ -159,6 +159,54 @@ def gqa_prefill(
     return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
 
 
+def _dequant_pages(rows: jax.Array, scales: Optional[jax.Array]) -> jax.Array:
+    """Dequantize gathered int8 page rows in-flight (``scales`` broadcast over
+    the trailing feature dim); identity when the pool is fp."""
+    if scales is None:
+        return rows
+    return rows.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+
+
+def gqa_prefill_paged(
+    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    prefix_len: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Suffix-only prefill behind a cached prefix (shared-prefix KV cache).
+
+    ``x[B, T, D]`` holds the *uncached suffix* tokens; row ``b``'s token ``t``
+    sits at logical position ``prefix_len[b] + t`` (``positions`` carries
+    exactly that, so rope is applied at the true positions).  The first
+    ``prefix_len[b]`` positions are read from the paged pools through the
+    slot's page table — the pages the prefix cache matched — and masked
+    ``idx < prefix_len`` like any ragged paged read.  Suffix KV is returned
+    raw (same contract as :func:`gqa_prefill` with ``raw_cache``) for the
+    engine to scatter into the slot's fresh private pages.
+    """
+    b, t, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg, backend)
+    pk = _dequant_pages(gather_pages(pool["k"], table_rows),
+                        gather_pages(pool["k_s"], table_rows)
+                        if cfg.kv_quant else None)
+    pv = _dequant_pages(gather_pages(pool["v"], table_rows),
+                        gather_pages(pool["v_s"], table_rows)
+                        if cfg.kv_quant else None)
+    s = pk.shape[1]
+    kpos_pre = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    k_valid = jnp.concatenate(
+        [kpos_pre < prefix_len[:, None], jnp.ones((b, t), bool)], axis=1)
+    out = chunked_attention(
+        q,
+        jnp.concatenate([pk.astype(k.dtype), k], axis=1),
+        jnp.concatenate([pv.astype(v.dtype), v], axis=1),
+        positions,
+        jnp.concatenate([kpos_pre, positions], axis=1),
+        k_valid,
+        causal=True,
+    )
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
+
+
 def _attend_rows(qh, k_rows, v_rows, valid, scale, k_s=None, v_s=None):
     """One-token attention of ``qh[B,Hkv,grp,Dh]`` against gathered rows
     ``k/v[B,S,Hkv,D*]`` with validity mask ``valid[B,S]``.
@@ -429,6 +477,57 @@ def mla_prefill(
     out = chunked_attention(q, k, v, positions, positions, causal=causal)
     y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
     return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
+
+
+def mla_prefill_paged(
+    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    prefix_len: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Suffix-only MLA prefill behind a cached latent prefix.
+
+    The cached pages hold the *latent* rows (``ckv``/``kpe``), so the prefix
+    is re-expanded through ``wkv_b`` together with the suffix latents (one
+    joint ``apply_linear`` — W4A16 when quantized) and attention runs in the
+    expanded form exactly like :func:`mla_prefill`; the per-position FLOPs of
+    the expansion are trivial next to the transformer layers the cache hit
+    skips.  Suffix latents are returned raw for the page scatter.
+    """
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
+    ckv_suf, kpe_suf = _mla_latent(p, x, positions, cfg, backend)
+    pckv = _dequant_pages(gather_pages(pool["ckv"], table_rows),
+                          gather_pages(pool["ckv_s"], table_rows)
+                          if cfg.kv_quant else None)
+    pkpe = _dequant_pages(gather_pages(pool["kpe"], table_rows),
+                          gather_pages(pool["kpe_s"], table_rows)
+                          if cfg.kv_quant else None)
+    s = pckv.shape[1]
+    ckv = jnp.concatenate([pckv.astype(ckv_suf.dtype), ckv_suf], axis=1)
+    kpe = jnp.concatenate([pkpe.astype(kpe_suf.dtype), kpe_suf], axis=1)
+    kvb = L.apply_linear(p["wkv_b"], ckv, backend=backend).reshape(
+        b, s + t, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe[:, :, None, :],
+                                  (b, s + t, h, m.qk_rope_head_dim))], -1
+    )
+    dp = ("pod", "data")
+    q = shard_hint(q, dp, None, "model", None)
+    k = shard_hint(k, dp, None, "model", None)
+    v = shard_hint(v, dp, None, "model", None)
+    kpos_pre = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    k_valid = jnp.concatenate(
+        [kpos_pre < prefix_len[:, None], jnp.ones((b, t), bool)], axis=1)
+    out = chunked_attention(
+        q, k, v, positions,
+        jnp.concatenate([kpos_pre, positions], axis=1), k_valid, causal=True)
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    return y, {"ckv": ckv_suf, "kpe": kpe_suf,
+               "lens": jnp.full((b,), t, jnp.int32)}
 
 
 def _mla_absorb_weights(p, cfg: ModelConfig):

@@ -26,19 +26,36 @@ from a fixed-slot continuous batcher backed by a **paged KV cache**:
   tracks *live* tokens and concurrency is bounded by real memory, not the
   worst case (the single-A100 deployment headline of the paper).  On pool
   exhaustion the engine **preempts** the youngest active slot(s): their live
-  pool rows are swapped to a host buffer (raw codes + scales, bit-exact) and
-  the request requeues at the *queue head* (FCFS preserved); it resumes by
-  swap-in — page realloc + row scatter — never by re-prefilling.  An
-  admission watermark (one free page per decoding slot) keeps preemption a
-  rare pressure-relief valve.  ``reservation="worstcase"`` restores the old
-  up-front ``prompt + max_tokens`` reservation as the benchmark baseline.
+  *private* pool rows are swapped to a host buffer (raw codes + scales,
+  bit-exact; the device→host copy is started asynchronously and only awaited
+  at swap-in) and the request requeues at the *queue head* (FCFS preserved);
+  it resumes by swap-in — page realloc + row scatter — never by
+  re-prefilling.  An admission watermark (one free page per decoding slot)
+  keeps preemption a rare pressure-relief valve.  ``reservation="worstcase"``
+  restores the old up-front ``prompt + max_tokens`` reservation as the
+  benchmark baseline.
+- **shared-prefix KV cache** (``prefix_cache=True``): full prompt pages are
+  block-hash-indexed (``serving/prefix_cache.py``); a request whose prompt
+  extends a cached prefix *attaches* the matched pages (refcounted, shared,
+  read-only — copy-on-write guards any write) and prefills **only its
+  uncached suffix**, with prefill attention reading the cached prefix pages
+  through the same paged machinery decode uses.  Finished slots index their
+  generated full pages too, so multi-turn continuations match.  Unreferenced
+  cached pages stay resident as an LRU pool reserve and are evicted exactly
+  when an allocation needs them.  Shared pages are never swapped out with a
+  preemption victim — swap-in re-acquires them.  Cache-hit requests emit
+  greedy tokens identical to a cold run (asserted in tests/CI; note the
+  identity is at the argmax level — a warm suffix prefill reads the prefix
+  through the pools, so under ``kv_quant`` its logits match the cold run's
+  only to within int8 quantization error, exactly like paged decode steps
+  already do).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +64,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import api
 from repro.serving import kv_cache as KV
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_per_slot
 from repro.serving.scheduler import Scheduler
 
@@ -70,12 +88,16 @@ class Request:
 @dataclasses.dataclass
 class _SwapState:
     """Host-side image of a preempted slot: everything needed to resume it
-    bit-exactly without re-prefilling."""
-    rows: Any                     # np pytree [L, n_pages, PS, ...] per leaf
-    n_pages: int                  # pages owned at swap-out
+    bit-exactly without re-prefilling.  Shared/cached pages are *not* part of
+    the image — they stay resident in the pool under a swap hold and resume
+    re-acquires them (``kept``); only private pages round-trip as rows."""
+    rows: Any                     # pytree [L, n_private, PS, ...] (or None)
+    kept: List[Tuple[int, int]]   # (logical_idx, page) left resident
+    private_lis: List[int]        # logical idxs of the swapped rows
     pos: int                      # next write position
     last_tok: int                 # token feeding the next decode step
     nbytes: int                   # swap buffer size (stats)
+    on_host: bool = False         # rows materialized to numpy (device freed)
 
 
 @dataclasses.dataclass
@@ -93,6 +115,14 @@ class EngineStats:
     idle_steps: int = 0           # drain iterations with nothing decodable
     max_active: int = 0           # peak concurrent decoding slots
     active_slot_steps: int = 0    # sum of active slots over steps (mean = /steps)
+    # shared-prefix cache:
+    admitted: int = 0             # requests admitted (incl. resumes? no: fresh)
+    prefix_hits: int = 0          # admissions that matched >= 1 cached page
+    prefix_matched_tokens: int = 0  # prompt tokens served from the cache
+    pages_shared: int = 0         # page attachments (shared, not allocated)
+    pages_inserted: int = 0       # pages newly indexed by the cache
+    pages_evicted: int = 0        # unreferenced cached pages reclaimed (LRU)
+    cow_copies: int = 0           # copy-on-write page duplications
 
 
 class ServingEngine:
@@ -111,6 +141,7 @@ class ServingEngine:
         max_prefill_tokens: Optional[int] = None,
         prefill_mode: str = "bucketed",
         reservation: str = "lazy",
+        prefix_cache: bool = False,
     ):
         ok, why = api.paged_supported(cfg)
         if not ok:
@@ -134,6 +165,10 @@ class ServingEngine:
                 f"num_pages={num_pages} cannot hold one max_seq request "
                 f"({self.P} pages of {page_size} tokens + trash page)")
         self.pager = KV.PagePool(num_pages, page_size, batch_size, self.P)
+        self.cache: Optional[PrefixCache] = (
+            PrefixCache(self.pager, page_size,
+                        mode=f"kvq={int(bool(cfg.kv_quant))}")
+            if prefix_cache else None)
         self.pools = api.init_paged_cache(cfg, num_pages, page_size)
         self.reservation = reservation
         self.sched = Scheduler(page_size=page_size, max_seq=self.S,
@@ -166,6 +201,15 @@ class ServingEngine:
                 last_idx=last_idx, raw_cache=True
             )
         )
+        # suffix-only prefill behind a cached prefix: reads the matched pages
+        # through the page table, prefills only the uncached tail (bucketed
+        # by *suffix* length).  The pools ride in read-only (not donated).
+        self._prefill_paged = jax.jit(
+            lambda p, toks, last_idx, pfx, table, pools: api.prefill_paged_fn(
+                p, {"tokens": toks}, pools, table, pfx, cfg, backend=backend,
+                last_idx=last_idx
+            )
+        )
         self._sample = jax.jit(sample_per_slot)
 
     # ------------------------------------------------------------- admin ---
@@ -193,23 +237,59 @@ class ServingEngine:
         tps = jnp.asarray([r.top_p if r else 1.0 for r in reqs], jnp.float32)
         return self._sample(logits, sk, temps, tks, tps)
 
+    # -------------------------------------------------- prefix-cache glue --
+    def _written_tokens(self, slot: int) -> np.ndarray:
+        """Token ids at every written position of ``slot`` (prompt followed
+        by the generated tokens whose KV has landed in the pages)."""
+        req = self.slots[slot]
+        n_gen = int(self.pos[slot]) - len(req.prompt)
+        if n_gen <= 0:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.output[:n_gen], np.int32)])
+
+    def _cache_insert_slot(self, slot: int) -> None:
+        """Index every full written page of ``slot`` (idempotent).  The
+        scheduler memoized the prompt's chain hashes on the request; only
+        pages of generated tokens hash fresh here."""
+        toks = self._written_tokens(slot)
+        req = self.slots[slot]
+        head = getattr(req, "_block_hashes", ())
+        hashes = self.cache.block_hashes(toks, head=head)
+        self.stats.pages_inserted += self.cache.insert(
+            toks, self.pager.slot_pages(slot), len(toks) // self.PS,
+            hashes=hashes)
+
     # ---------------------------------------------------- swap-out / -in ---
     def _preempt(self, slot: int) -> None:
-        """Swap ``slot`` out to host memory and requeue its request at the
-        queue *head* (it was admitted before anything still queued, so FCFS
-        order is preserved).  The swap buffer holds the slot's live pool rows
-        verbatim — fp16 K/V or int8 codes + f32 scale leaves — so resume is
-        bit-exact and preemption is a pure scheduling effect."""
+        """Swap ``slot`` out and requeue its request at the queue *head* (it
+        was admitted before anything still queued, so FCFS order is
+        preserved).  Only the slot's *private* pages round-trip through the
+        host buffer — pages shared with other slots or resident in the prefix
+        cache stay in the pool under a swap hold (they were read-only full
+        pages anyway) and resume re-acquires them.  The swap buffer holds the
+        private pool rows verbatim — fp16 K/V or int8 codes + f32 scale
+        leaves — so resume is bit-exact and preemption is a pure scheduling
+        effect.  The device→host copy is kicked off asynchronously and
+        overlaps the following decode step, after which the rows are
+        materialized to host and the device-side gather buffer dropped
+        (:meth:`_drain_swap_buffers`)."""
         req = self.slots[slot]
-        pages = self.pager.slot_pages(slot)
-        rows = jax.device_get(
-            api.gather_pool_rows(self.pools, jnp.asarray(pages, jnp.int32)))
-        nbytes = sum(a.nbytes for a in jax.tree.leaves(rows))
+        kept, private = self.pager.split_for_swap(slot)
+        rows, nbytes = None, 0
+        if private:
+            rows = api.gather_pool_rows(
+                self.pools,
+                jnp.asarray([p for _, p in private], jnp.int32))
+            # start the device->host transfer without blocking the step loop
+            jax.tree.map(lambda a: a.copy_to_host_async(), rows)
+            nbytes = sum(a.nbytes for a in jax.tree.leaves(rows))
+        self.pager.swap_out(slot, (kept, private))
         self._swapped[req.submit_seq] = _SwapState(
-            rows=rows, n_pages=len(pages), pos=int(self.pos[slot]),
-            last_tok=int(self.last_tok[slot]), nbytes=nbytes)
+            rows=rows, kept=kept, private_lis=[li for li, _ in private],
+            pos=int(self.pos[slot]), last_tok=int(self.last_tok[slot]),
+            nbytes=nbytes)
         self.queue.appendleft(req)
-        self.pager.free_slot(slot)
         self.slots[slot] = None
         self.pos[slot] = 0
         self.last_tok[slot] = 0
@@ -217,13 +297,15 @@ class ServingEngine:
         self.stats.swapped_out_bytes += nbytes
 
     def _resume(self, slot: int, req: Request) -> None:
-        """Swap a preempted request back in: realloc its page count, scatter
-        the host rows into the fresh pages, restore the decode cursor."""
+        """Swap a preempted request back in: re-acquire its held shared
+        pages, realloc the private ones, scatter the host rows into them
+        (first touch of the async swap buffer), restore the decode cursor."""
         st = self._swapped.pop(req.submit_seq)
-        self.pager.alloc(slot, st.n_pages)
-        self.pools = api.scatter_pool_rows(
-            self.pools, st.rows,
-            jnp.asarray(self.pager.slot_pages(slot), jnp.int32))
+        fresh = self.pager.swap_in(slot, st.kept, st.private_lis)
+        if st.rows is not None:
+            rows = jax.device_get(st.rows)     # no-op once drained to host
+            self.pools = api.scatter_pool_rows(
+                self.pools, rows, jnp.asarray(fresh, jnp.int32))
         self.slots[slot] = req
         self.pos[slot] = st.pos
         self.last_tok[slot] = st.last_tok
@@ -262,28 +344,51 @@ class ServingEngine:
                 return
             st = self._swapped[self.queue[0].submit_seq]
             reserve = self.B - len(free)          # watermark: active slots
-            if not self.pager.can_alloc(st.n_pages + reserve):
+            if not self.pager.can_alloc(len(st.private_lis) + reserve):
                 return
             self._resume(free.pop(0), self.queue.popleft())
         if not free or not self.queue:
             return
         reserve = (self.B - len(free)) if self.reservation == "lazy" else 0
-        for bkt in self.sched.plan(self.queue, free, self.pager, reserve):
+        for bkt in self.sched.plan(self.queue, free, self.pager, reserve,
+                                   self.cache):
             n, blen = len(bkt.reqs), bkt.pad_len
+            pfx = np.asarray(bkt.prefix_lens, np.int32)
             toks = np.zeros((n, blen), np.int32)
-            lens = np.empty(n, np.int32)
+            lens = np.empty(n, np.int32)           # suffix lengths
             for r, req in enumerate(bkt.reqs):
-                lens[r] = len(req.prompt)
-                toks[r, : lens[r]] = req.prompt
-            logits, raw = self._prefill(
-                self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
+                lens[r] = len(req.prompt) - pfx[r]
+                toks[r, : lens[r]] = req.prompt[pfx[r]:]
+            # COW first: a page-aligned full match re-prefills the last
+            # prompt token into a private copy of the final matched page,
+            # so the copies must exist before the prefill reads/writes them.
+            # The planner left a hold on each src pinning it against reuse
+            # until its rows are duplicated here (one batched dispatch).
+            pairs = [p for p in bkt.cow if p is not None]
+            if pairs:
+                self.pools = api.copy_pool_page(
+                    self.pools,
+                    jnp.asarray([s for s, _ in pairs], jnp.int32),
+                    jnp.asarray([d for _, d in pairs], jnp.int32))
+                for src, _ in pairs:
+                    self.pager.drop_hold(src)
+                self.stats.cow_copies += len(pairs)
+            if pfx.any():
+                rows_tbl = jnp.asarray(self.pager.table()[bkt.slots])
+                logits, raw = self._prefill_paged(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
+                    jnp.asarray(pfx), rows_tbl, self.pools)
+            else:
+                logits, raw = self._prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
             raw = {"layers": {k: v for k, v in raw["layers"].items()
                               if k != "lens"}}
             # int8 pools: quantize the raw prefix rows per-(position, head)
             # so the scatter below writes codes + scale leaves in one pass
             raw = api.quantize_raw_paged(raw, self.cfg)
             rows = self.pager.table()[bkt.slots]           # [n, P]
-            page, off = KV.prefix_write_plan(lens, rows, self.PS, blen)
+            page, off = KV.prefix_write_plan(lens, rows, self.PS, blen,
+                                             starts=pfx)
             self.pools = KV.write_prefix(
                 self.pools, raw, jnp.asarray(page), jnp.asarray(off))
             self.key, sk = jax.random.split(self.key)
@@ -295,9 +400,15 @@ class ServingEngine:
                 req.output.append(first)
                 req.first_token_t = now
                 self.slots[slot] = req
-                self.pos[slot] = lens[r]
+                self.pos[slot] = len(req.prompt)
                 self.last_tok[slot] = first
                 self.stats.prefilled_tokens += int(lens[r])
+                self.stats.admitted += 1
+                self.stats.prefix_matched_tokens += int(pfx[r])
+                self.stats.prefix_hits += int(pfx[r] > 0)
+                self.stats.pages_shared += bkt.shared[r]
+                if self.cache is not None:
+                    self._cache_insert_slot(slot)
             self.stats.prefill_batches += 1
 
     # -------------------------------------------------------------- step ---
@@ -309,10 +420,14 @@ class ServingEngine:
         active = self._active_slots()
         if not active:
             return 0
-        # use-after-free tripwire: no active slot may point at the trash page
+        # pager tripwires: no active slot may point at the trash page, every
+        # refcount must match the tables + swap holds, and the page under
+        # each write cursor must be private (shared pages are read-only)
         KV.assert_live_tables(
             self.pager.table(), self.pos, self.PS,
-            [s is not None for s in self.slots])
+            [s is not None for s in self.slots],
+            refs=self.pager.refs(), held=self.pager.held(),
+            cached=self.pager.cached_mask())
         tok = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
         table = jnp.asarray(self.pager.table())
@@ -343,11 +458,30 @@ class ServingEngine:
             if hit_len or hit_eos or hit_cap:
                 req.done_t = time.perf_counter()
                 self.stats.completed += 1
+                if self.cache is not None:
+                    # index the generated full pages too before the refs
+                    # drop: identical continuations (multi-turn) now match
+                    self._cache_insert_slot(i)
                 self.slots[i] = None   # slot freed → continuous batching
                 self.pos[i] = 0
                 self.last_tok[i] = 0
                 self.pager.free_slot(i)
+        if self.cache is not None:
+            self.stats.pages_evicted = self.cache.stats.evicted_pages
+        self._drain_swap_buffers()
         return len(active)
+
+    def _drain_swap_buffers(self) -> None:
+        """Finish pending swap-out transfers: the async device→host copy
+        started at preemption has had this whole decode step to complete, so
+        materialize the rows to numpy now and drop the device-side gather
+        buffer — otherwise a long-preempted request would keep its entire
+        private-page image alive in device memory, which is exactly what
+        swap-out exists to release."""
+        for st in self._swapped.values():
+            if st.rows is not None and not st.on_host:
+                st.rows = jax.device_get(st.rows)
+                st.on_host = True
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         """Step until queue and slots are empty.  ``max_steps`` bounds *all*
@@ -366,8 +500,10 @@ class ServingEngine:
                 self.stats.idle_steps += 1
                 head = self.queue[0]
                 swapped = head.submit_seq in self._swapped
-                need = (self._swapped[head.submit_seq].n_pages if swapped
-                        else self.sched.pages_needed(head, self.pager))
+                need = (len(self._swapped[head.submit_seq].private_lis)
+                        if swapped
+                        else self.sched.pages_needed(head, self.pager,
+                                                     self.cache))
                 free_slots = sum(s is None for s in self.slots)
                 raise RuntimeError(
                     f"admission stalled: queue head request uid={head.uid} "
@@ -375,7 +511,9 @@ class ServingEngine:
                     f"{'swapped-out, ' if swapped else ''}"
                     f"needs {need} pages) cannot be admitted with "
                     f"free_pages={self.pager.free_pages}/"
-                    f"{self.pager.num_pages - 1}, free_slots={free_slots}/"
+                    f"{self.pager.num_pages - 1} "
+                    f"(+{self.pager.evictable_pages()} evictable), "
+                    f"free_slots={free_slots}/"
                     f"{self.B}, and no active slot can unblock it")
         return self.stats
 

@@ -1,0 +1,172 @@
+"""Shared-prefix KV cache: block-hash index over pool pages + LRU eviction.
+
+Many live requests share a long system / few-shot prompt.  Without reuse,
+every such request re-prefills the shared prefix from scratch *and* holds a
+private copy of identical pages — wasted FLOPs and wasted pool pages.  This
+module gives the pager an **automatic prefix cache** (the vLLM
+automatic-prefix-caching design, block-granular):
+
+- every *full* page of a sequence gets a **chained block hash**:
+  ``h_i = H(h_{i-1}, token_ids(page_i))``, rooted in the pool's KV
+  quantization mode — int8 and fp16 pools can never cross-match, and a page
+  is only reachable through the exact token prefix that produced it;
+- the index maps chain hash → resident pool page.  Matching a new prompt
+  walks its full pages front-to-back and stops at the first miss, so a hit
+  is always a *prefix* of whole pages;
+- cached pages are **read-only**; the pool keeps them resident after the
+  last slot reference drops (refcount 0 + cached = *evictable*) and this
+  cache reclaims them **LRU-first** through the pool's evictor hook exactly
+  when an allocation would otherwise fail — cached-but-unreferenced pages
+  are free memory in waiting, never a reservation;
+- the hash chain is over *tokens*, not pages, so evicting a parent simply
+  makes descendants unmatchable until the prefix is re-inserted; a dangling
+  entry can never alias wrong content.
+
+The scheduler calls :meth:`match` + ``PagePool.attach`` at admission (the
+engine then prefills only the uncached suffix), and the engine calls
+:meth:`insert` with a slot's full pages after prefill and again when the
+slot finishes, so generated tokens become matchable too (multi-turn reuse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import PagePool
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    lookups: int = 0            # match() calls
+    hits: int = 0               # match() calls returning >= 1 page
+    matched_tokens: int = 0     # sum of matched whole-page tokens
+    inserted_pages: int = 0     # pages newly indexed
+    evicted_pages: int = 0      # unreferenced cached pages reclaimed
+
+
+class PrefixCache:
+    """Block-hash index + LRU evictor over a :class:`PagePool`.
+
+    ``mode`` is folded into the root hash so pools with different on-device
+    row encodings (fp16 vs int8+scales) never share pages.
+    """
+
+    def __init__(self, pool: PagePool, page_size: int, *, mode: str = ""):
+        self.pool = pool
+        self.page_size = page_size
+        self._root = hashlib.sha256(mode.encode()).digest()
+        self._index: Dict[bytes, int] = {}     # chain hash -> pool page
+        self._by_page: Dict[int, bytes] = {}   # pool page -> chain hash
+        self._lru: Dict[int, int] = {}         # evictable page -> last-use tick
+        self._clock = 0
+        self.stats = PrefixCacheStats()
+        pool.set_evictor(self)
+
+    # ------------------------------------------------------------- hashing --
+    def block_hashes(self, tokens, head=()) -> List[bytes]:
+        """Chained hash per *full* page of ``tokens``.
+
+        ``head`` may carry already-computed hashes for the leading pages
+        (e.g. a request's memoized prompt hashes when hashing prompt +
+        generated tokens at slot finish) — full pages never straddle the
+        prompt/generation boundary, so a prompt-page hash is a combined-
+        sequence page hash verbatim and only the continuation is chained.
+        """
+        toks = np.asarray(tokens, np.int32)
+        n = len(toks) // self.page_size
+        out = list(head[:n])
+        h = out[-1] if out else self._root
+        for i in range(len(out), n):
+            blk = toks[i * self.page_size : (i + 1) * self.page_size]
+            h = hashlib.sha256(h + blk.tobytes()).digest()
+            out.append(h)
+        return out
+
+    # ------------------------------------------------------ match / insert --
+    def match(self, tokens, hashes: Optional[List[bytes]] = None
+              ) -> Tuple[List[int], int]:
+        """Longest cached whole-page prefix of ``tokens``.
+
+        Returns ``(pages, matched_tokens)``.  Matched evictable pages are
+        LRU-touched, so an immediately following ``pool.attach`` cannot lose
+        them to an eviction triggered by the same admission plan.  Pass
+        precomputed ``hashes`` (:meth:`block_hashes` — pure in the tokens) to
+        skip re-chain-hashing: a blocked queue head is re-matched every
+        engine step, and only the index lookups can change between steps.
+        """
+        self.stats.lookups += 1
+        pages: List[int] = []
+        for h in (hashes if hashes is not None
+                  else self.block_hashes(tokens)):
+            p = self._index.get(h)
+            if p is None:
+                break
+            pages.append(p)
+        self._clock += 1
+        for p in pages:
+            if p in self._lru:
+                self._lru[p] = self._clock
+        if pages:
+            self.stats.hits += 1
+            self.stats.matched_tokens += len(pages) * self.page_size
+        return pages, len(pages) * self.page_size
+
+    def insert(self, tokens, pages: List[int], n_full: int,
+               hashes: Optional[List[bytes]] = None) -> int:
+        """Index the first ``n_full`` pages of a slot's written sequence.
+
+        Idempotent: a chain hash already indexed is skipped (this is how a
+        COW duplicate of a cached page, or a re-insert at slot finish, stays
+        un-indexed — the canonical first copy wins).  The slot must still
+        reference the pages (they are marked read-only in the pool here).
+        ``hashes`` skips re-chain-hashing like in :meth:`match`.
+        Returns the number of pages newly indexed.
+        """
+        inserted = 0
+        if hashes is None:
+            hashes = self.block_hashes(tokens)
+        for h, p in zip(hashes[:n_full], pages[:n_full]):
+            if h in self._index or p in self._by_page:
+                continue
+            self._index[h] = p
+            self._by_page[p] = h
+            self.pool.mark_cached(p)
+            inserted += 1
+        self.stats.inserted_pages += inserted
+        return inserted
+
+    # ------------------------------------------------------- evictor hooks --
+    def on_unreferenced(self, page: int) -> None:
+        """Pool callback: a cached page's last reference dropped → evictable."""
+        self._clock += 1
+        self._lru[page] = self._clock
+
+    def on_referenced(self, page: int) -> None:
+        """Pool callback: an evictable page was re-attached → pinned."""
+        self._lru.pop(page, None)
+
+    def evictable_count(self) -> int:
+        return len(self._lru)
+
+    def evictable_page_ids(self):
+        return self._lru.keys()
+
+    def evict_one(self) -> bool:
+        """Reclaim the least-recently-used unreferenced cached page (drop its
+        index entry, return the page to the pool's free list)."""
+        if not self._lru:
+            return False
+        page = min(self._lru, key=self._lru.get)
+        del self._lru[page]
+        h = self._by_page.pop(page)
+        del self._index[h]
+        self.pool.release_cached(page)
+        self.stats.evicted_pages += 1
+        return True
+
+    # --------------------------------------------------------------- misc ---
+    def __len__(self) -> int:
+        return len(self._index)

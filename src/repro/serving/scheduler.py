@@ -29,6 +29,17 @@ preemption is the rare pressure-relief valve, not a steady-state tax.  The
 reserve is waived when nothing is active (``reserve=0``) so an empty engine
 can always admit its head and never deadlocks on its own watermark.
 
+**Prefix cache** (``cache=`` on :meth:`Scheduler.plan`): the head's prompt
+is matched against the block-hash index first.  Matched whole pages are
+*attached* (shared, refcounted — no allocation, no prefill) and admission is
+charged only for the **uncached suffix**; buckets are keyed by the suffix's
+bucket length, so a 2000-token prompt behind a warm system prefix competes
+for prefill budget like the 20-token suffix it actually is.  At least one
+token is always prefilled (the engine needs last-token logits to sample):
+when the whole prompt is cached (a page-aligned full match) the plan takes a
+**copy-on-write** of the final matched page and re-prefills just the last
+prompt token into the private copy.
+
 ``mode="slotwise"`` degenerates to one request per bucket at its exact prompt
 length — the seed engine's prefill strategy — kept as the benchmark baseline.
 """
@@ -36,17 +47,24 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Tuple
 
 from repro.serving.kv_cache import PagePool
 
 
 @dataclasses.dataclass
 class PrefillBucket:
-    pad_len: int          # joint prefill length (tokens)
+    pad_len: int          # joint prefill length (suffix tokens)
     reqs: list            # admitted Requests, FCFS order
     slots: List[int]      # slot id per request
-    needs: List[int]      # pages reserved per request
+    needs: List[int]      # fresh pages allocated per request
+    prefix_lens: List[int] = dataclasses.field(default_factory=list)
+    # matched prefix tokens per request (0 = cold)
+    shared: List[int] = dataclasses.field(default_factory=list)
+    # pages attached (shared, not allocated) per request
+    cow: List[Optional[Tuple[int, int]]] = dataclasses.field(
+        default_factory=list)
+    # (src, dst) pool pages whose rows the engine must copy before prefill
 
 
 class Scheduler:
@@ -69,17 +87,28 @@ class Scheduler:
             b *= 2
         return min(b, self.max_seq)
 
-    def pages_needed(self, req, pool: PagePool) -> int:
+    def _tokens_wanted(self, req) -> int:
         if self.reservation == "worstcase":
-            want = min(len(req.prompt) + req.max_tokens, self.max_seq)
-        else:
-            # lazy: cover the prompt plus the first decode write only; the
-            # engine grows the table page-by-page as decode proceeds
-            want = min(len(req.prompt) + 1, self.max_seq)
-        return pool.pages_needed(want)
+            return min(len(req.prompt) + req.max_tokens, self.max_seq)
+        # lazy: cover the prompt plus the first decode write only; the
+        # engine grows the table page-by-page as decode proceeds
+        return min(len(req.prompt) + 1, self.max_seq)
+
+    def pages_needed(self, req, pool: PagePool, cache=None) -> int:
+        """Fresh-page cost of admitting ``req`` (cold total without
+        ``cache``; with it, the matched whole-page prefix is subtracted and a
+        page-aligned full match pays one extra page for its COW copy) —
+        diagnostic twin of the arithmetic :meth:`plan` performs."""
+        total = pool.pages_needed(self._tokens_wanted(req))
+        if cache is None:
+            return total
+        matched, mtok = cache.match(
+            req.prompt, hashes=getattr(req, "_block_hashes", None))
+        full_match = bool(matched) and mtok == len(req.prompt)
+        return total - len(matched) + (1 if full_match else 0)
 
     def plan(self, queue: Deque, free_slots: List[int], pool: PagePool,
-             reserve: int = 0) -> List[PrefillBucket]:
+             reserve: int = 0, cache=None) -> List[PrefillBucket]:
         """Pop admissible requests off ``queue`` and bucket them.
 
         Reserves pages in ``pool`` for every admitted request (so a later
@@ -87,31 +116,76 @@ class Scheduler:
         ``reserve`` is the admission watermark: free pages that must remain
         after each admit (one growth page per decoding slot — the engine
         passes its active-slot count, and each admission here adds one).
+        With ``cache`` (a ``PrefixCache``), matched whole-page prefixes are
+        attached shared and only the uncached suffix is charged/prefilled.
         """
         slots = deque(free_slots)
         budget = self.max_prefill_tokens
-        buckets: dict[int, PrefillBucket] = {}
+        buckets: dict = {}
         spent = 0
         while queue and slots:
             req = queue[0]
-            need = self.pages_needed(req, pool)
-            if not pool.can_alloc(need + reserve):
+            t = len(req.prompt)
+            # cheap pre-filter before hashing the prompt: no match can need
+            # fewer than one fresh page, so a drained pool blocks the head
+            # without re-chain-hashing a long prompt every engine step
+            if not pool.can_alloc(1 + reserve):
+                break
+            if cache is not None:       # not truthiness: empty index matches
+                # chain hashes are pure in the prompt tokens: compute them
+                # once per request, not once per engine step while blocked
+                hs = getattr(req, "_block_hashes", None)
+                if hs is None:
+                    hs = req._block_hashes = cache.block_hashes(req.prompt)
+                matched, mtok = cache.match(req.prompt, hashes=hs)
+            else:
+                matched, mtok = [], 0
+            # never admit a zero-token prefill: the engine samples the first
+            # output from the last prompt token's logits, so a page-aligned
+            # full match re-prefills that one token into a COW'd private
+            # copy of the final matched page
+            full_match = matched and mtok == t
+            suffix = 1 if full_match else t - mtok
+            prefix = t - suffix
+            total = pool.pages_needed(self._tokens_wanted(req))
+            fresh = total - len(matched) + (1 if full_match else 0)
+            # matched-but-unreferenced pages are about to be *pinned* by the
+            # attach below, so they must not be double-counted as evictable
+            # headroom for the fresh allocation — otherwise attach + grow
+            # would blow up on a pool whose only evictable pages are the very
+            # ones this request is re-using
+            pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
+            if not pool.can_alloc(fresh + reserve + pinned):
                 break                       # FCFS: head blocks the line
-            blen = (len(req.prompt) if self.mode == "slotwise"
-                    else self.bucket_len(len(req.prompt)))
+            blen = (suffix if self.mode == "slotwise"
+                    else self.bucket_len(suffix))
             if budget is not None and spent and spent + blen > budget:
                 break                       # chunk the backlog across steps
             queue.popleft()
             slot = slots.popleft()
-            pool.alloc(slot, need)
+            if matched:
+                pool.attach(slot, matched)
+            # hold_src: the engine performs the src→dst device copy later
+            # (per bucket, before its prefill); the hold pins src so no
+            # allocation in the rest of this plan can reclaim + overwrite it
+            # first — the engine drops the hold right after the copy
+            cow_pair = (pool.cow(slot, len(matched) - 1, hold_src=True)
+                        if full_match else None)
+            if fresh - (1 if full_match else 0):
+                pool.grow(slot, fresh - (1 if full_match else 0))
             if self.reservation == "lazy":
                 reserve += 1                # growth headroom for the new slot
-            key = blen if self.mode == "bucketed" else (blen, slot)
+            shared = len(matched) - (1 if full_match else 0)
+            key = (blen if self.mode == "bucketed" else (blen, slot),
+                   prefix > 0)
             bkt = buckets.get(key)
             if bkt is None:
                 bkt = buckets[key] = PrefillBucket(blen, [], [], [])
             bkt.reqs.append(req)
             bkt.slots.append(slot)
-            bkt.needs.append(need)
+            bkt.needs.append(fresh)
+            bkt.prefix_lens.append(prefix)
+            bkt.shared.append(shared)
+            bkt.cow.append(cow_pair)
             spent += blen
         return list(buckets.values())

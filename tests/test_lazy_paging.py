@@ -37,42 +37,110 @@ def test_pager_grow_appends_pages():
 
 
 def test_pager_randomized_stress_interleaved_ops():
-    """Random admit/grow/finish/preempt-swap sequences hold the pager
-    invariants after every single operation."""
+    """Random admit (with prefix-cache match/attach/COW) / decode-grow /
+    finish (cache insert) / preempt-swap / swap-in / explicit COW / LRU evict
+    sequences hold the pager + cache invariants after every single operation.
+
+    Token sequences are drawn from a tiny alphabet with page-aligned shared
+    stems, so block-hash matches, shared attachments, full-aligned-match COW,
+    and held-page swaps all actually occur."""
+    from repro.serving.prefix_cache import PrefixCache
+
     rng = np.random.default_rng(0)
-    pool = KV.PagePool(num_pages=17, page_size=4, batch_size=5,
-                       max_pages_per_slot=5)
-    live: dict[int, int] = {}              # slot -> pages owned
-    swapped: list[int] = []                # page counts of swapped-out slots
+    B, PS, NP, MAXP = 5, 4, 25, 8
+    pool = KV.PagePool(num_pages=NP, page_size=PS, batch_size=B,
+                       max_pages_per_slot=MAXP)
+    cache = PrefixCache(pool, PS, mode="stress")
+    stems = [list(rng.integers(0, 3, 8)) for _ in range(3)]   # shared prefixes
+    live: dict[int, dict] = {}             # slot -> {tokens, written}
+    swapped: list[dict] = []               # swap states
+
+    def admit(slot):
+        toks = stems[int(rng.integers(0, 3))] + list(
+            rng.integers(0, 3, int(rng.integers(0, 9))))
+        t = len(toks)
+        matched, mtok = cache.match(toks)
+        full = bool(matched) and mtok == t
+        total = pool.pages_needed(t + 1)
+        fresh = total - len(matched) + (1 if full else 0)
+        if total > MAXP or not pool.can_alloc(fresh):
+            return
+        if matched:
+            pool.attach(slot, matched)
+        if full:
+            # last page goes private; the hold mirrors the engine pinning
+            # the src until its device rows are copied
+            src, _ = pool.cow(slot, len(matched) - 1, hold_src=True)
+            pool.check_invariants()
+            pool.drop_hold(src)
+        if fresh - (1 if full else 0):
+            pool.grow(slot, fresh - (1 if full else 0))
+        cache.insert(toks, pool.slot_pages(slot), t // PS)
+        live[slot] = {"tokens": list(toks), "written": t}
+
+    ops_hit = set()
     for _ in range(500):
-        op = rng.choice(["admit", "grow", "finish", "preempt", "swap_in"])
-        slot = int(rng.integers(0, 5))
+        op = rng.choice(["admit", "decode", "finish", "preempt", "swap_in",
+                         "cow", "evict"])
+        slot = int(rng.integers(0, B))
         if op == "admit" and slot not in live:
-            n = int(rng.integers(1, 4))
-            if pool.can_alloc(n):
-                pool.alloc(slot, n)
-                live[slot] = n
-        elif op == "grow" and slot in live and live[slot] < 5:
-            if pool.can_alloc(1):
+            admit(slot)
+        elif op == "decode" and slot in live:
+            st = live[slot]
+            cap = len(pool.slot_pages(slot)) * PS
+            if st["written"] + 1 > cap:
+                if cap // PS >= MAXP or not pool.can_alloc(1):
+                    continue
                 pool.grow(slot, 1)
-                live[slot] += 1
+            st["tokens"].append(int(rng.integers(0, 3)))
+            st["written"] += 1
         elif op == "finish" and slot in live:
+            st = live.pop(slot)
+            cache.insert(st["tokens"], pool.slot_pages(slot),
+                         st["written"] // PS)
             pool.free_slot(slot)
-            del live[slot]
         elif op == "preempt" and live:
             victim = max(live)             # any deterministic choice works
-            swapped.append(live.pop(victim))
-            pool.free_slot(victim)
+            kept, private = pool.split_for_swap(victim)
+            # shared / cached pages are never part of the swap image
+            assert all(pool.page_ref(p) > 1 or pool.is_cached(p)
+                       for _, p in kept)
+            pool.swap_out(victim, (kept, private))
+            for _, p in kept:              # ...and stay pinned (un-evictable)
+                assert pool.page_ref(p) > 0
+            swapped.append(dict(live.pop(victim), kept=kept,
+                                private_lis=[li for li, _ in private]))
         elif op == "swap_in" and swapped:
-            n = swapped[0]
-            idle = [s for s in range(5) if s not in live]
-            if idle and pool.can_alloc(n):
-                pool.alloc(idle[0], n)
-                live[idle[0]] = n
+            st = swapped[0]
+            idle = [s for s in range(B) if s not in live]
+            if idle and pool.can_alloc(len(st["private_lis"])):
+                pool.swap_in(idle[0], st["kept"], st["private_lis"])
+                live[idle[0]] = {"tokens": st["tokens"],
+                                 "written": st["written"]}
                 swapped.pop(0)
+        elif op == "cow" and live:
+            # explicit COW of any shared/cached page a live slot lists
+            cands = [(s, li, p) for s in live
+                     for li, p in enumerate(pool.slot_pages(s))
+                     if pool.page_ref(p) > 1 or pool.is_cached(p)]
+            if cands and pool.can_alloc(1):
+                s, li, p = cands[int(rng.integers(0, len(cands)))]
+                old, new = pool.cow(s, li)
+                assert old == p and pool.page_ref(new) == 1
+                assert not pool.is_cached(new)
+        elif op == "evict":
+            cache.evict_one()
+        ops_hit.add(op)
         pool.check_invariants()
-    owned = sum(live.values())
-    assert owned + pool.free_pages == pool.num_pages - 1
+    # the randomized walk must actually exercise the whole op surface
+    assert ops_hit == {"admit", "decode", "finish", "preempt", "swap_in",
+                       "cow", "evict"}
+    assert cache.stats.hits > 0 and cache.stats.evicted_pages > 0
+    # conservation: every page is free, referenced, or evictable-cached
+    referenced = {p for s in range(B) for p in pool.slot_pages(s)}
+    referenced |= {p for st in swapped for _, p in st["kept"]}
+    evictable = cache.evictable_count()
+    assert len(referenced) + pool.free_pages + evictable == pool.num_pages - 1
 
 
 def test_scheduler_lazy_reserves_prompt_plus_one():

@@ -1,0 +1,298 @@
+"""Shared-prefix KV cache: block-hash chaining, refcounted sharing + LRU
+eviction at the pager level, suffix-only admission planning, and engine-level
+cache-hit-vs-cold greedy token identity (fp16 and int8 pools, GQA and MLA)."""
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serving import kv_cache as KV
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import Scheduler
+
+
+# ------------------------------------------------------------ hash index ----
+def test_block_hash_chaining_and_mode_isolation():
+    pool = KV.PagePool(9, 4, batch_size=1, max_pages_per_slot=8)
+    c = PrefixCache(pool, 4, mode="fp")
+    toks = np.arange(12)
+    h = c.block_hashes(toks)
+    assert len(h) == 3                      # full pages only
+    assert c.block_hashes(np.arange(11))[:2] == h[:2]       # shared prefix
+    # chaining: same page-2 tokens behind a different page 1 → different hash
+    other = np.concatenate([np.arange(4), np.zeros(4, int), np.arange(8, 12)])
+    assert c.block_hashes(other)[2] != h[2]
+    # kv-quant mode is folded into the root: int8 pools never cross-match fp
+    c8 = PrefixCache(KV.PagePool(9, 4, 1, 8), 4, mode="int8")
+    assert c8.block_hashes(toks) != h
+
+
+def test_match_attach_cow_and_lru_eviction():
+    pool = KV.PagePool(10, 4, batch_size=3, max_pages_per_slot=9)
+    cache = PrefixCache(pool, 4, mode="")
+    toks = np.arange(9)                     # 2 full pages + 1 tail token
+    pages = pool.alloc(0, 3)
+    cache.insert(toks, pages, 2)
+    assert len(cache) == 2 and pool.is_cached(pages[0])
+    # a hit attaches shared read-only pages: refcount 2, still cached
+    got, mtok = cache.match(toks)
+    assert got == pages[:2] and mtok == 8
+    pool.attach(1, got)
+    pool.check_invariants()
+    assert pool.page_ref(pages[0]) == 2
+    # COW hands slot 1 a private copy and releases the shared one
+    old, new = pool.cow(1, 1)
+    assert old == pages[1] and pool.page_ref(new) == 1
+    assert not pool.is_cached(new) and pool.page_ref(pages[1]) == 1
+    pool.check_invariants()
+    # owner finishes: cached pages become evictable, uncached pages free
+    pool.free_slot(0)
+    pool.free_slot(1)
+    pool.check_invariants()
+    assert cache.evictable_count() == 2
+    free0 = pool.free_pages
+    assert pool.can_alloc(free0 + 2)        # evictable counts as allocatable
+    # allocation pressure reclaims LRU-first and drops the index entries:
+    # pages[1] became unreferenced before pages[0] (slot 1 still shared the
+    # latter), so it is the LRU victim and the chain now ends after page 0
+    pool.alloc(2, free0 + 1)
+    pool.check_invariants()
+    assert cache.stats.evicted_pages == 1 and len(cache) == 1
+    got, mtok = cache.match(toks)
+    assert got == [pages[0]] and mtok == 4
+
+
+def test_swap_holds_keep_shared_pages_resident():
+    pool = KV.PagePool(12, 4, batch_size=2, max_pages_per_slot=6)
+    cache = PrefixCache(pool, 4, mode="")
+    toks = np.arange(8)
+    pages = pool.alloc(0, 3)                # 2 full (cached) + 1 private tail
+    cache.insert(toks, pages, 2)
+    kept, private = pool.split_for_swap(0)
+    assert [p for _, p in kept] == pages[:2]
+    assert [li for li, _ in private] == [2]
+    pool.swap_out(0)
+    pool.check_invariants()
+    # held pages are pinned: not evictable, not freeable
+    assert cache.evictable_count() == 0
+    assert pool.page_ref(pages[0]) == 1
+    # swap-in re-acquires the held pages and reallocs the private one
+    fresh = pool.swap_in(1, kept, [2])
+    pool.check_invariants()
+    assert len(fresh) == 1
+    assert pool.slot_pages(1)[:2] == pages[:2]
+
+
+def test_assert_live_tables_validates_refcounts():
+    pool = KV.PagePool(9, 4, batch_size=2, max_pages_per_slot=4)
+    cache = PrefixCache(pool, 4, mode="")
+    pages = pool.alloc(0, 2)
+    write_pos = np.asarray([6, 0])
+    ok = dict(refs=pool.refs(), held=pool.held(), cached=pool.cached_mask())
+    KV.assert_live_tables(pool.table(), write_pos, 4, [True, False], **ok)
+    # sharing the write page (without COW) must trip the write hazard
+    pool.attach(1, [pages[1]])
+    with pytest.raises(RuntimeError, match="copy-on-write"):
+        KV.assert_live_tables(pool.table(), write_pos, 4, [True, False],
+                              refs=pool.refs(), held=pool.held(),
+                              cached=pool.cached_mask())
+    pool.free_slot(1)
+    # a cached (read-only) write page trips it too
+    cache.insert(np.arange(8), pages, 2)
+    with pytest.raises(RuntimeError, match="copy-on-write"):
+        KV.assert_live_tables(pool.table(), write_pos, 4, [True, False],
+                              refs=pool.refs(), held=pool.held(),
+                              cached=pool.cached_mask())
+    # ...but not while the cursor sits in an uncached private page
+    pool.grow(0, 1)
+    KV.assert_live_tables(pool.table(), np.asarray([9, 0]), 4, [True, False],
+                          refs=pool.refs(), held=pool.held(),
+                          cached=pool.cached_mask())
+    # refcount drift (corruption) is named
+    pool.refs()[pages[0]] += 1
+    with pytest.raises(RuntimeError, match="refcount out of sync"):
+        KV.assert_live_tables(pool.table(), np.asarray([9, 0]), 4,
+                              [True, False], refs=pool.refs())
+    pool.refs()[pages[0]] -= 1
+
+
+def test_scheduler_charges_only_the_uncached_suffix():
+    pool = KV.PagePool(33, 4, batch_size=4, max_pages_per_slot=8)
+    cache = PrefixCache(pool, 4, mode="")
+    sched = Scheduler(page_size=4, max_seq=32)
+    sys_p = np.arange(2, 14)                              # 12 tokens, 3 pages
+    donor_pages = pool.alloc(3, 4)
+    cache.insert(sys_p, donor_pages, 3)
+    pool.free_slot(3)
+    req = Request(uid=0, prompt=np.concatenate([sys_p, [77, 78]]),
+                  max_tokens=8)                           # 14 tokens
+    free0 = pool.free_pages
+    [bkt] = sched.plan(deque([req]), [0], pool, cache=cache)
+    assert bkt.prefix_lens == [12] and bkt.pad_len == 4   # suffix bucket
+    assert bkt.shared == [3] and bkt.cow == [None]
+    # charged only ceil((14+1)/4) - 3 = 1 fresh page; 3 pages attached shared
+    assert bkt.needs == [1] and free0 - pool.free_pages == 1
+    assert pool.slot_pages(0)[:3] == donor_pages[:3]
+    pool.check_invariants()
+    # page-aligned full match: COW of the last matched page + 1-token suffix
+    pool.free_slot(0)
+    req2 = Request(uid=1, prompt=sys_p.copy(), max_tokens=8)
+    free0 = pool.free_pages
+    [bkt2] = sched.plan(deque([req2]), [1], pool, cache=cache)
+    assert bkt2.prefix_lens == [11] and bkt2.cow[0] is not None
+    assert bkt2.needs == [2]                              # COW copy + tail
+    src, dst = bkt2.cow[0]
+    assert src == donor_pages[2] and pool.slot_pages(1)[2] == dst
+    assert free0 - pool.free_pages == 2
+    pool.check_invariants()
+    # the plan leaves a hold pinning the COW source until the engine has
+    # copied its rows — only then may it become evictable/reallocatable
+    assert pool.held()[src] == 1 and pool.page_ref(src) == 1
+    assert not pool.can_alloc(pool.free_pages + 1)   # src not reclaimable
+    pool.drop_hold(src)
+    pool.check_invariants()
+    assert pool.can_alloc(pool.free_pages + 1)       # now evictable again
+
+
+def test_plan_blocks_when_only_evictable_pages_are_the_match():
+    """Regression: the admission check must not count the head's own matched
+    evictable pages as allocatable headroom — attaching pins them, so a pool
+    whose only reclaimable pages are the match itself cannot supply the
+    fresh pages and the head must block gracefully (FCFS), not crash plan()
+    with an out-of-pages RuntimeError mid-admission."""
+    pool = KV.PagePool(5, 4, batch_size=2, max_pages_per_slot=4)
+    cache = PrefixCache(pool, 4, mode="")
+    sys_p = np.arange(2, 14)                      # 12 tokens = 3 full pages
+    donor = pool.alloc(0, 4)
+    cache.insert(sys_p, donor, 3)
+    pool.free_slot(0)                             # 3 evictable + 1 free
+    pool.alloc(1, 1)                              # free = 0, evictable = 3
+    sched = Scheduler(page_size=4, max_seq=16)
+    q = deque([Request(uid=0, prompt=np.concatenate([sys_p, [77, 78]]),
+                       max_tokens=4)])
+    assert sched.plan(q, [0], pool, cache=cache) == []
+    assert len(q) == 1                            # head still queued, intact
+    pool.check_invariants()
+    assert cache.evictable_count() == 3           # nothing was pinned
+
+
+# --------------------------------------------------- engine token identity --
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = get_config("codellama-7b", smoke=True)
+    return cfg, api.init_model(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    return cfg, api.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _prefix_prompts(cfg, sys_len=12, tails=(3, 5, 2), seed=7):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(2, cfg.vocab_size, sys_len).astype(np.int32)
+    return [np.concatenate(
+        [sys_p, rng.integers(2, cfg.vocab_size, n).astype(np.int32)])
+        for n in tails]
+
+
+def _drive(params, cfg, prompts, prefix_cache, max_tokens=5, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_seq", 32)
+    eng = ServingEngine(params, cfg, page_size=4, backend="xla",
+                        prefix_cache=prefix_cache, **kw)
+    reqs = [Request(uid=i, prompt=p.copy(), max_tokens=max_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    eng.pager.check_invariants()
+    return [r.output for r in reqs], eng
+
+
+def _identity_case(cfg, params):
+    """Cold engine vs prefix-cache engine on prompts sharing a 12-token
+    system prefix, then a warm probe on the cached engine: greedy outputs
+    must be token-identical throughout, and the probe must prefill only its
+    suffix (the acceptance criterion: prefilled_tokens down by ~L, at least
+    L/page_size pages shared)."""
+    prompts = _prefix_prompts(cfg)
+    cold, _ = _drive(params, cfg, prompts, False)
+    warm, eng = _drive(params, cfg, prompts, True)
+    assert warm == cold
+    assert eng.stats.prefix_hits >= 1       # later admissions matched
+    # warm probe: identical prompt to request 0 (15 tokens, 3 full pages)
+    before = eng.stats.prefilled_tokens
+    shared0 = eng.stats.pages_shared
+    probe = Request(uid=99, prompt=prompts[0].copy(), max_tokens=5)
+    eng.submit(probe)
+    eng.run_until_drained()
+    eng.pager.check_invariants()
+    assert probe.output == cold[0]
+    L = len(prompts[0]) // 4 * 4            # whole-page prefix tokens
+    assert eng.stats.prefilled_tokens - before == len(prompts[0]) - L
+    assert eng.stats.pages_shared - shared0 >= L // 4
+    assert eng.stats.prefix_matched_tokens >= L
+
+
+def test_engine_cache_hit_token_identity_gqa_fp(gqa_setup):
+    cfg, params = gqa_setup
+    _identity_case(cfg, params)
+
+
+def test_engine_cache_hit_token_identity_gqa_int8(gqa_setup):
+    cfg, _ = gqa_setup
+    cfg = cfg.with_(dtype="float32", kv_quant=True)
+    _identity_case(cfg, api.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def test_engine_cache_hit_token_identity_mla_fp(mla_setup):
+    cfg, params = mla_setup
+    _identity_case(cfg, params)
+
+
+def test_engine_cache_hit_token_identity_mla_int8(mla_setup):
+    cfg, _ = mla_setup
+    cfg = cfg.with_(dtype="float32", kv_quant=True)
+    _identity_case(cfg, api.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def test_engine_full_aligned_match_takes_cow(gqa_setup):
+    """A page-aligned fully-cached prompt re-prefills exactly one token into
+    a copy-on-write duplicate of the final matched page — and still emits
+    cold-identical greedy tokens."""
+    cfg, params = gqa_setup
+    rng = np.random.default_rng(3)
+    p16 = rng.integers(2, cfg.vocab_size, 16).astype(np.int32)   # 4 pages
+    cold, _ = _drive(params, cfg, [p16], False)
+    _, eng = _drive(params, cfg, [p16], True)
+    probe = Request(uid=9, prompt=p16.copy(), max_tokens=5)
+    before = eng.stats.prefilled_tokens
+    eng.submit(probe)
+    eng.run_until_drained()
+    eng.pager.check_invariants()
+    assert probe.output == cold[0]
+    assert eng.stats.cow_copies == 1
+    assert eng.stats.prefilled_tokens - before == 1
+
+
+def test_engine_preemption_with_cache_stays_identical(gqa_setup):
+    """Pool pressure with the cache on: LRU eviction feeds allocation,
+    preemption swaps only private pages (shared prefix pages stay resident
+    under swap holds), and greedy outputs still match an unconstrained
+    cache-off engine."""
+    cfg, params = gqa_setup
+    prompts = _prefix_prompts(cfg, sys_len=12, tails=(5, 5, 5, 5))
+    cold, _ = _drive(params, cfg, prompts, False, max_tokens=10,
+                     batch_size=3, max_seq=32)
+    tight, eng = _drive(params, cfg, prompts, True, max_tokens=10,
+                        batch_size=3, max_seq=32, num_pages=1 + 8)
+    assert tight == cold
+    assert eng.stats.preemptions > 0 and eng.stats.resumes == eng.stats.preemptions
+    assert eng.stats.pages_evicted > 0       # cache gave pages back under load
+    assert eng.stats.pages_shared > 0
