@@ -117,3 +117,38 @@ def mla_paged_attention(q_lat, q_pe, ckv_pool, kpe_pool, table_rows, lengths,
         q_lat, q_pe, ckv_pool, kpe_pool, table_rows, lengths,
         ckv_scale, kpe_scale,
         sm_scale=sm_scale, interpret=(backend == "interpret"))
+
+
+def gqa_paged_prefill(q, k_suf, v_suf, k_pool, v_pool, table_rows,
+                      prefix_len, chunk_len, k_scale=None, v_scale=None, *,
+                      sm_scale: float, backend: str = "auto") -> jax.Array:
+    """Chunked-prefill attention off the paged pools (GQA).  The jnp gather
+    oracle lives model-side (``models.attention.gqa_prefill_chunk`` with
+    ``paged_attn_impl="gather"``)."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(
+            f"paged prefill kernel backend must be pallas/interpret, got "
+            f"{backend!r}; use the model-level gather path for XLA")
+    return _pa.gqa_paged_prefill(
+        q, k_suf, v_suf, k_pool, v_pool, table_rows, prefix_len, chunk_len,
+        k_scale, v_scale,
+        sm_scale=sm_scale, interpret=(backend == "interpret"))
+
+
+def mla_paged_prefill(q_lat, q_pe, ckv_suf, kpe_suf, ckv_pool, kpe_pool,
+                      table_rows, prefix_len, chunk_len,
+                      ckv_scale=None, kpe_scale=None, *, sm_scale: float,
+                      backend: str = "auto") -> jax.Array:
+    """Chunked-prefill attention off the paged pools (MLA absorbed form)."""
+    if backend == "auto":
+        backend = default_backend()
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(
+            f"paged prefill kernel backend must be pallas/interpret, got "
+            f"{backend!r}; use the model-level gather path for XLA")
+    return _pa.mla_paged_prefill(
+        q_lat, q_pe, ckv_suf, kpe_suf, ckv_pool, kpe_pool, table_rows,
+        prefix_len, chunk_len, ckv_scale, kpe_scale,
+        sm_scale=sm_scale, interpret=(backend == "interpret"))

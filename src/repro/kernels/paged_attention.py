@@ -19,6 +19,12 @@ Grids
   ``grp = H/Hkv`` query heads for one KV head against one page.
   MLA (absorbed form): ``(B, P)``; scores run in the latent space
   (``q_lat·ckv + q_pe·kpe``) so the per-page work covers all H heads.
+  Chunked prefill: the same grids with one extra step — ``(B, Hkv, P+1)`` /
+  ``(B, P+1)`` — where queries arrive as a ``[B, T_chunk, …]`` block at true
+  positions ``prefix_len[b] + t``.  Steps ``0..P-1`` stream the cached
+  prefix pages (masked ``kv_pos < prefix_len``, no causal term needed since
+  every chunk query postdates the prefix); the final step attends the
+  chunk's own raw-fp K/V with a causal-within-chunk mask and flushes.
 
 Online-softmax state (m, l, acc) lives in VMEM scratch, initialized at page
 0 and flushed on the last page step (same shape as ``flash_attention``).
@@ -306,6 +312,339 @@ def mla_paged_attention(
         ),
         interpret=interpret,
     )(flat_tbl, lengths, *operands)
+
+
+# ================================================== chunked prefill (GQA) ==
+def _gqa_prefill_kernel(tbl_ref, pfx_ref, cln_ref, q_ref, ksuf_ref, vsuf_ref,
+                        k_ref, v_ref, *rest, page_size: int, n_pages: int,
+                        t_chunk: int, grp: int, scale: float, quant: bool):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    prefix = pfx_ref[b]
+    chunk = cln_ref[b]
+    rows = t_chunk * grp
+
+    def _q_rows():
+        return q_ref[0, :, 0].astype(jnp.float32).reshape(rows, -1)
+
+    def _update(s, valid, v, v_row_scale):
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(-1, keepdims=True)
+        if v_row_scale is not None:
+            pexp = pexp * v_row_scale
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    # grid steps 0..P-1: the cached prefix, one pool page per step — every
+    # chunk query sits at position >= prefix, so the only mask is raggedness
+    @pl.when((p < n_pages) & (p * page_size < prefix))
+    def _pages():
+        q = _q_rows()                                   # [T*grp, Dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # [PS, Dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # [PS, Dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # [T*grp, PS]
+        if quant:
+            s = s * ks_ref[0, :, 0][None, :]
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _update(s, pos < prefix, v,
+                vs_ref[0, :, 0][None, :] if quant else None)
+
+    # final grid step: the chunk attends its own raw-fp K/V (the rows being
+    # written this step) with a causal-within-chunk mask — no int8 scale, so
+    # cold/warm chunks keep the slab-prefill numerics bit-for-bit
+    @pl.when(p == n_pages)
+    def _suffix():
+        q = _q_rows()
+        k = ksuf_ref[0, :, 0, :].astype(jnp.float32)    # [T, Dh]
+        v = vsuf_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # [T*grp, T]
+        tq = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // grp
+        j = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _update(s, (j <= tq) & (j < chunk), v, None)
+
+    @pl.when(p == n_pages)
+    def _flush():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = o.reshape(t_chunk, grp, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def gqa_paged_prefill(
+    q: jax.Array,               # [B, T, Hkv, grp, Dh] chunk queries
+    k_suf: jax.Array,           # [B, T, Hkv, Dh] raw chunk keys (pre-quant)
+    v_suf: jax.Array,           # [B, T, Hkv, Dv]
+    k_pool: jax.Array,          # [NP, PS, Hkv, Dh] (bf16/f32 or int8)
+    v_pool: jax.Array,          # [NP, PS, Hkv, Dv]
+    table_rows: jax.Array,      # [B, P] int32 pool page per logical page
+    prefix_len: jax.Array,      # [B] int32 tokens already in the pages
+    chunk_len: jax.Array,       # [B] int32 valid rows of this chunk (<= T)
+    k_scale: jax.Array | None = None,   # [NP, PS, Hkv] f32 (int8 pools)
+    v_scale: jax.Array | None = None,
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:                 # [B, T, Hkv, grp, Dv] f32
+    """Chunked-prefill attention straight off the paged pools.
+
+    Grid ``(B, Hkv, P+1)``: steps ``0..P-1`` DMA prefix pages by block table
+    (dead pages clamp to the last live one, eliding the copy — same contract
+    as the decode grid); the final step attends the chunk's own raw-fp
+    suffix K/V with a causal mask ``j <= t`` and flushes.  Every query row
+    ``t`` sits at true position ``prefix_len[b] + t``, which is >= any
+    prefix position, so prefix steps need no causal term.
+    """
+    b, t, hkv, grp, dh = q.shape
+    ps = k_pool.shape[1]
+    dv = v_pool.shape[-1]
+    pages = table_rows.shape[1]
+    quant = k_scale is not None
+    flat_tbl = table_rows.reshape(-1).astype(jnp.int32)
+    prefix_len = prefix_len.astype(jnp.int32)
+    chunk_len = chunk_len.astype(jnp.int32)
+
+    def pool_map(bi, hi, pi, tbl, pfx, cln):
+        # clamp past-prefix steps (incl. the suffix step P) to the last live
+        # prefix page; max(live, 1) keeps cold rows (prefix 0) in range
+        live = jnp.maximum(_live_pages(pfx[bi], ps), 1)
+        pp = jnp.minimum(pi, live - 1)
+        return (tbl[bi * pages + pp], 0, hi, 0)
+
+    def scale_map(bi, hi, pi, tbl, pfx, cln):
+        live = jnp.maximum(_live_pages(pfx[bi], ps), 1)
+        pp = jnp.minimum(pi, live - 1)
+        return (tbl[bi * pages + pp], 0, hi)
+
+    def fixed(bi, hi, pi, tbl, pfx, cln):
+        return (bi, 0, hi, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, t, 1, grp, dh),
+                     lambda bi, hi, pi, tbl, pfx, cln: (bi, 0, hi, 0, 0)),
+        pl.BlockSpec((1, t, 1, dh), fixed),
+        pl.BlockSpec((1, t, 1, dv), fixed),
+        pl.BlockSpec((1, ps, 1, dh), pool_map),
+        pl.BlockSpec((1, ps, 1, dv), pool_map),
+    ]
+    operands = [q, k_suf, v_suf, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, pages + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, t, 1, grp, dv),
+            lambda bi, hi, pi, tbl, pfx, cln: (bi, 0, hi, 0, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((t * grp, 1), jnp.float32),
+            pltpu.VMEM((t * grp, 1), jnp.float32),
+            pltpu.VMEM((t * grp, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _gqa_prefill_kernel, page_size=ps, n_pages=pages, t_chunk=t,
+            grp=grp, scale=sm_scale, quant=quant,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, hkv, grp, dv), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(flat_tbl, prefix_len, chunk_len, *operands)
+
+
+# ================================================== chunked prefill (MLA) ==
+def _mla_prefill_kernel(tbl_ref, pfx_ref, cln_ref, qlat_ref, qpe_ref,
+                        csuf_ref, psuf_ref, ckv_ref, kpe_ref, *rest,
+                        page_size: int, n_pages: int, t_chunk: int,
+                        heads: int, scale: float, quant: bool):
+    if quant:
+        cs_ref, pscl_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    prefix = pfx_ref[b]
+    chunk = cln_ref[b]
+    rows = t_chunk * heads
+
+    def _q_rows():
+        q_lat = qlat_ref[0].astype(jnp.float32).reshape(rows, -1)
+        q_pe = qpe_ref[0].astype(jnp.float32).reshape(rows, -1)
+        return q_lat, q_pe
+
+    def _update(s, valid, v, v_row_scale):
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(-1, keepdims=True)
+        if v_row_scale is not None:
+            pexp = pexp * v_row_scale
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when((p < n_pages) & (p * page_size < prefix))
+    def _pages():
+        q_lat, q_pe = _q_rows()                         # [T*H, r], [T*H, dr]
+        ckv = ckv_ref[0].astype(jnp.float32)            # [PS, r]
+        kpe = kpe_ref[0].astype(jnp.float32)            # [PS, dr]
+        s_lat = jax.lax.dot_general(
+            q_lat, ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s_pe = jax.lax.dot_general(
+            q_pe, kpe, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if quant:
+            s_lat = s_lat * cs_ref[0][None, :]
+            s_pe = s_pe * pscl_ref[0][None, :]
+        s = (s_lat + s_pe) * scale                      # [T*H, PS]
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _update(s, pos < prefix, ckv,
+                cs_ref[0][None, :] if quant else None)
+
+    @pl.when(p == n_pages)
+    def _suffix():
+        q_lat, q_pe = _q_rows()
+        ckv_s = csuf_ref[0].astype(jnp.float32)         # [T, r] raw latent
+        kpe_s = psuf_ref[0].astype(jnp.float32)         # [T, dr]
+        s = (jax.lax.dot_general(
+            q_lat, ckv_s, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + jax.lax.dot_general(
+            q_pe, kpe_s, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )) * scale                                      # [T*H, T]
+        tq = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // heads
+        j = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        _update(s, (j <= tq) & (j < chunk), ckv_s, None)
+
+    @pl.when(p == n_pages)
+    def _flush():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = o.reshape(t_chunk, heads, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def mla_paged_prefill(
+    q_lat: jax.Array,           # [B, T, H, r] absorbed chunk queries
+    q_pe: jax.Array,            # [B, T, H, dr]
+    ckv_suf: jax.Array,         # [B, T, r] raw chunk latent (pre-quant)
+    kpe_suf: jax.Array,         # [B, T, dr]
+    ckv_pool: jax.Array,        # [NP, PS, r] (bf16/f32 or int8)
+    kpe_pool: jax.Array,        # [NP, PS, dr]
+    table_rows: jax.Array,      # [B, P] int32
+    prefix_len: jax.Array,      # [B] int32 tokens already in the pages
+    chunk_len: jax.Array,       # [B] int32 valid rows of this chunk (<= T)
+    ckv_scale: jax.Array | None = None,  # [NP, PS] f32 (int8 pools)
+    kpe_scale: jax.Array | None = None,
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:                 # [B, T, H, r] f32 latent output
+    """MLA chunked prefill in absorbed form, same grid story as GQA but
+    ``(B, P+1)`` — latent scores cover all H heads per page step."""
+    b, t, h, r = q_lat.shape
+    dr = q_pe.shape[-1]
+    ps = ckv_pool.shape[1]
+    pages = table_rows.shape[1]
+    quant = ckv_scale is not None
+    flat_tbl = table_rows.reshape(-1).astype(jnp.int32)
+    prefix_len = prefix_len.astype(jnp.int32)
+    chunk_len = chunk_len.astype(jnp.int32)
+
+    def pool_map(bi, pi, tbl, pfx, cln):
+        live = jnp.maximum(_live_pages(pfx[bi], ps), 1)
+        pp = jnp.minimum(pi, live - 1)
+        return (tbl[bi * pages + pp], 0, 0)
+
+    def scale_map(bi, pi, tbl, pfx, cln):
+        live = jnp.maximum(_live_pages(pfx[bi], ps), 1)
+        pp = jnp.minimum(pi, live - 1)
+        return (tbl[bi * pages + pp], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, t, h, r), lambda bi, pi, tbl, pfx, cln: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, t, h, dr), lambda bi, pi, tbl, pfx, cln: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, t, r), lambda bi, pi, tbl, pfx, cln: (bi, 0, 0)),
+        pl.BlockSpec((1, t, dr), lambda bi, pi, tbl, pfx, cln: (bi, 0, 0)),
+        pl.BlockSpec((1, ps, r), pool_map),
+        pl.BlockSpec((1, ps, dr), pool_map),
+    ]
+    operands = [q_lat, q_pe, ckv_suf, kpe_suf, ckv_pool, kpe_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps), scale_map),
+                     pl.BlockSpec((1, ps), scale_map)]
+        operands += [ckv_scale, kpe_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, pages + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, t, h, r), lambda bi, pi, tbl, pfx, cln: (bi, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((t * h, 1), jnp.float32),
+            pltpu.VMEM((t * h, 1), jnp.float32),
+            pltpu.VMEM((t * h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _mla_prefill_kernel, page_size=ps, n_pages=pages, t_chunk=t,
+            heads=h, scale=sm_scale, quant=quant,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, r), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(flat_tbl, prefix_len, chunk_len, *operands)
 
 
 # ====================================================== roofline estimates ==

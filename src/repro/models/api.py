@@ -151,18 +151,18 @@ def copy_pool_page(pools, src: jax.Array, dst: jax.Array):
     return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pools)
 
 
-def prefill_paged_fn(params, batch, cache, table_rows, prefix_len,
+def prefill_chunk_fn(params, batch, cache, table_rows, start_len, chunk_len,
                      cfg: ModelConfig, *, backend: str = "auto",
                      last_idx=None):
-    """Suffix-only prefill against cached prefix pages (shared-prefix KV
-    cache): only the uncached tail rides through the transformer; attention
-    reads positions ``< prefix_len[b]`` from the pools via ``table_rows``.
-    Returns (per-row last-token logits, raw suffix KV for the page scatter).
-    """
+    """Chunked prefill straight into the paged pools: one ``[B, T]`` prompt
+    chunk per slot at logical positions ``start_len[b] + t``; KV scatters
+    per chunk, attention reads every earlier token (cached prefix and prior
+    chunks alike) through ``table_rows``.  Returns (per-row last-token
+    logits — meaningful on final chunks — and the updated pools)."""
     if cfg.encdec:
         raise NotImplementedError("paged prefill is decoder-only")
-    return LM.lm_prefill_paged(params, batch["tokens"], cache, prefix_len,
-                               table_rows, cfg, backend=backend,
+    return LM.lm_prefill_chunk(params, batch["tokens"], cache, start_len,
+                               chunk_len, table_rows, cfg, backend=backend,
                                last_idx=last_idx, **_lm_kw(batch))
 
 

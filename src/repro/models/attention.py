@@ -167,44 +167,106 @@ def _dequant_pages(rows: jax.Array, scales: Optional[jax.Array]) -> jax.Array:
     return rows.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
 
 
-def gqa_prefill_paged(
-    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
-    prefix_len: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Suffix-only prefill behind a cached prefix (shared-prefix KV cache).
+def _chunk_positions(start_len: jax.Array, t: int) -> jax.Array:
+    """True logical positions of a ``[B, T]`` chunk whose row ``b`` starts at
+    ``start_len[b]`` tokens already written."""
+    return start_len[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
 
-    ``x[B, T, D]`` holds the *uncached suffix* tokens; row ``b``'s token ``t``
-    sits at logical position ``prefix_len[b] + t`` (``positions`` carries
-    exactly that, so rope is applied at the true positions).  The first
-    ``prefix_len[b]`` positions are read from the paged pools through the
-    slot's page table — the pages the prefix cache matched — and masked
-    ``idx < prefix_len`` like any ragged paged read.  Suffix KV is returned
-    raw (same contract as :func:`gqa_prefill` with ``raw_cache``) for the
-    engine to scatter into the slot's fresh private pages.
+
+def _scatter_chunk(pool: Dict[str, jax.Array], updates: Dict[str, jax.Array],
+                   table_rows: jax.Array, start_len: jax.Array,
+                   chunk_len: jax.Array, kv_quant: bool):
+    """Scatter a ``[B, T, ...]`` chunk of raw KV rows into the paged pools at
+    logical positions ``start_len[b] + t`` (quantizing per row under
+    ``kv_quant``).  Padded rows (``t >= chunk_len[b]``) land on the trash
+    page, exactly like ``prefix_write_plan`` routes invalid rows."""
+    b, t = next(iter(updates.values())).shape[:2]
+    ps = pool[next(iter(updates))].shape[1]
+    n_pages = table_rows.shape[1]
+    pos = _chunk_positions(start_len, t)
+    valid = jnp.arange(t, dtype=jnp.int32)[None, :] < chunk_len[:, None]
+    lpage = jnp.minimum(pos // ps, n_pages - 1)
+    pg = jnp.where(valid, table_rows[jnp.arange(b)[:, None], lpage], 0)
+    off = pos % ps
+    new_pool = dict(pool)
+    for name, rows in updates.items():
+        if kv_quant:
+            codes, scl = kv_quantize_rows(rows)
+            new_pool[name] = pool[name].at[pg, off].set(codes)
+            new_pool[name + "_s"] = pool[name + "_s"].at[pg, off].set(
+                scl.astype(pool[name + "_s"].dtype))
+        else:
+            new_pool[name] = pool[name].at[pg, off].set(
+                rows.astype(pool[name].dtype))
+    return new_pool
+
+
+def gqa_prefill_chunk(
+    p, x, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    start_len: jax.Array, chunk_len: jax.Array, cfg: ModelConfig, *,
+    backend: str = "auto"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill straight against the paged pools.
+
+    ``x[B, T, D]`` holds one prompt chunk per slot; row ``b``'s token ``t``
+    sits at logical position ``start_len[b] + t`` (rope applied there), where
+    ``start_len`` counts every token already in the pages — cached prefix
+    pages and earlier chunks alike.  The chunk's own KV is scattered into the
+    slot's pages first (quantized under ``kv_quant``); attention then reads
+    the ``start_len`` prefix rows *from the pools* — through the Pallas
+    chunked-prefill grid on the kernel impls, or the dense ``gather_pages``
+    oracle under ``paged_attn_impl="gather"`` — while the chunk attends its
+    own suffix K/V raw (pre-quantization), keeping slab-prefill numerics.
+    Rows with ``t >= chunk_len[b]`` are padding: scattered to trash, masked
+    out as keys.
     """
     b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    grp = h // hkv
+    positions = _chunk_positions(start_len, t)
     q, k, v = _qkv(p, x, positions, cfg, backend)
-    pk = _dequant_pages(gather_pages(pool["k"], table_rows),
-                        gather_pages(pool["k_s"], table_rows)
-                        if cfg.kv_quant else None)
-    pv = _dequant_pages(gather_pages(pool["v"], table_rows),
-                        gather_pages(pool["v_s"], table_rows)
-                        if cfg.kv_quant else None)
-    s = pk.shape[1]
-    kpos_pre = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    k_valid = jnp.concatenate(
-        [kpos_pre < prefix_len[:, None], jnp.ones((b, t), bool)], axis=1)
-    out = chunked_attention(
-        q,
-        jnp.concatenate([pk.astype(k.dtype), k], axis=1),
-        jnp.concatenate([pv.astype(v.dtype), v], axis=1),
-        positions,
-        jnp.concatenate([kpos_pre, positions], axis=1),
-        k_valid,
-        causal=True,
-    )
-    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
-    return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
+    new_pool = _scatter_chunk(pool, {"k": k, "v": v}, table_rows, start_len,
+                              chunk_len, cfg.kv_quant)
+    scale = dh ** -0.5
+    impl = _resolve_paged_impl(cfg, backend)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as K
+
+        out = K.gqa_paged_prefill(
+            q.reshape(b, t, hkv, grp, dh), k, v,
+            new_pool["k"], new_pool["v"], table_rows, start_len, chunk_len,
+            new_pool.get("k_s"), new_pool.get("v_s"), sm_scale=scale,
+            backend="interpret" if impl == "pallas_interpret" else "pallas",
+        ).reshape(b, t, h, -1)
+    else:
+        # XLA oracle: dense gather of the prefix pages (the copy the kernel
+        # exists to kill), suffix raw — identical masks to the kernel grid
+        pk = _dequant_pages(gather_pages(new_pool["k"], table_rows),
+                            gather_pages(new_pool["k_s"], table_rows)
+                            if cfg.kv_quant else None)
+        pv = _dequant_pages(gather_pages(new_pool["v"], table_rows),
+                            gather_pages(new_pool["v_s"], table_rows)
+                            if cfg.kv_quant else None)
+        s = pk.shape[1]
+        kpos_pre = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        k_valid = jnp.concatenate(
+            [kpos_pre < start_len[:, None],
+             jnp.arange(t, dtype=jnp.int32)[None, :] < chunk_len[:, None]],
+            axis=1)
+        out = chunked_attention(
+            q,
+            jnp.concatenate([pk.astype(k.dtype), k], axis=1),
+            jnp.concatenate([pv.astype(v.dtype), v], axis=1),
+            positions,
+            jnp.concatenate([kpos_pre, positions], axis=1),
+            k_valid,
+            causal=True,
+        )
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1).astype(x.dtype),
+                       backend=backend)
+    return y, new_pool
 
 
 def _attend_rows(qh, k_rows, v_rows, valid, scale, k_s=None, v_s=None):
@@ -479,55 +541,80 @@ def mla_prefill(
     return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
 
 
-def mla_prefill_paged(
-    p, x, positions, pool: Dict[str, jax.Array], table_rows: jax.Array,
-    prefix_len: jax.Array, cfg: ModelConfig, *, backend: str = "auto"
+def mla_prefill_chunk(
+    p, x, pool: Dict[str, jax.Array], table_rows: jax.Array,
+    start_len: jax.Array, chunk_len: jax.Array, cfg: ModelConfig, *,
+    backend: str = "auto"
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Suffix-only MLA prefill behind a cached latent prefix.
+    """Chunked MLA prefill against the paged latent pools, absorbed form.
 
-    The cached pages hold the *latent* rows (``ckv``/``kpe``), so the prefix
-    is re-expanded through ``wkv_b`` together with the suffix latents (one
-    joint ``apply_linear`` — W4A16 when quantized) and attention runs in the
-    expanded form exactly like :func:`mla_prefill`; the per-position FLOPs of
-    the expansion are trivial next to the transformer layers the cache hit
-    skips.  Suffix latents are returned raw for the page scatter.
+    Same chunk contract as :func:`gqa_prefill_chunk` — positions are
+    ``start_len[b] + t``, the chunk's raw latents scatter into the slot's
+    pages, padding rows go to trash.  Attention runs absorbed (scores in the
+    latent space, like decode) so the prefix pages stream through the Pallas
+    grid without ever re-expanding ``wkv_b`` over a dense gathered copy; the
+    chunk's own latents are attended raw (pre-quantization).  The absorbed
+    projections ride the grouped W4A16 kernel when ``wkv_b`` is int4.
     """
     m = cfg.mla
     b, t, _ = x.shape
     h = cfg.num_heads
+    positions = _chunk_positions(start_len, t)
     q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
     ckv_suf, kpe_suf = _mla_latent(p, x, positions, cfg, backend)
-    pckv = _dequant_pages(gather_pages(pool["ckv"], table_rows),
-                          gather_pages(pool["ckv_s"], table_rows)
-                          if cfg.kv_quant else None)
-    pkpe = _dequant_pages(gather_pages(pool["kpe"], table_rows),
-                          gather_pages(pool["kpe_s"], table_rows)
-                          if cfg.kv_quant else None)
-    s = pckv.shape[1]
-    ckv = jnp.concatenate([pckv.astype(ckv_suf.dtype), ckv_suf], axis=1)
-    kpe = jnp.concatenate([pkpe.astype(kpe_suf.dtype), kpe_suf], axis=1)
-    kvb = L.apply_linear(p["wkv_b"], ckv, backend=backend).reshape(
-        b, s + t, h, m.qk_nope_head_dim + m.v_head_dim
-    )
-    k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
-    q = jnp.concatenate([q_nope, q_pe], -1)
-    k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(kpe[:, :, None, :],
-                                  (b, s + t, h, m.qk_rope_head_dim))], -1
-    )
-    dp = ("pod", "data")
-    q = shard_hint(q, dp, None, "model", None)
-    k = shard_hint(k, dp, None, "model", None)
-    v = shard_hint(v, dp, None, "model", None)
-    kpos_pre = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    k_valid = jnp.concatenate(
-        [kpos_pre < prefix_len[:, None], jnp.ones((b, t), bool)], axis=1)
-    out = chunked_attention(
-        q, k, v, positions,
-        jnp.concatenate([kpos_pre, positions], axis=1), k_valid, causal=True)
-    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
-    return y, {"ckv": ckv_suf, "kpe": kpe_suf,
-               "lens": jnp.full((b,), t, jnp.int32)}
+    new_pool = _scatter_chunk(pool, {"ckv": ckv_suf, "kpe": kpe_suf},
+                              table_rows, start_len, chunk_len, cfg.kv_quant)
+    q_lat = _mla_absorb_q_lat(
+        p, q_nope.reshape(b * t, h, m.qk_nope_head_dim), cfg, backend
+    ).reshape(b, t, h, -1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    impl = _resolve_paged_impl(cfg, backend)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as K
+
+        o_lat = K.mla_paged_prefill(
+            q_lat, q_pe, ckv_suf, kpe_suf,
+            new_pool["ckv"], new_pool["kpe"], table_rows, start_len,
+            chunk_len, new_pool.get("ckv_s"), new_pool.get("kpe_s"),
+            sm_scale=scale,
+            backend="interpret" if impl == "pallas_interpret" else "pallas",
+        )
+    else:
+        # XLA oracle: dense gather + in-flight dequant of the latent prefix,
+        # suffix raw — same masks as the kernel grid
+        pckv = _dequant_pages(gather_pages(new_pool["ckv"], table_rows),
+                              gather_pages(new_pool["ckv_s"], table_rows)
+                              if cfg.kv_quant else None)
+        pkpe = _dequant_pages(gather_pages(new_pool["kpe"], table_rows),
+                              gather_pages(new_pool["kpe_s"], table_rows)
+                              if cfg.kv_quant else None)
+        s = pckv.shape[1]
+        ckv_all = jnp.concatenate(
+            [pckv.astype(jnp.float32), ckv_suf.astype(jnp.float32)], axis=1)
+        kpe_all = jnp.concatenate(
+            [pkpe.astype(jnp.float32), kpe_suf.astype(jnp.float32)], axis=1)
+        kpos_pre = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        k_pos = jnp.concatenate([kpos_pre, positions], axis=1)
+        k_valid = jnp.concatenate(
+            [kpos_pre < start_len[:, None],
+             jnp.arange(t, dtype=jnp.int32)[None, :] < chunk_len[:, None]],
+            axis=1)
+        sc = (
+            jnp.einsum("bthr,bsr->bhts", q_lat.astype(jnp.float32), ckv_all)
+            + jnp.einsum("bthd,bsd->bhts", q_pe.astype(jnp.float32), kpe_all)
+        ) * scale
+        mask = (k_valid[:, None, None, :]
+                & (k_pos[:, None, None, :] <= positions[:, None, :, None]))
+        sc = jnp.where(mask, sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", attn, ckv_all)
+    out = _mla_absorb_out(
+        p, o_lat.reshape(b * t, h, -1), cfg, backend
+    ).reshape(b, t, h * m.v_head_dim)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
+    return y, new_pool
 
 
 def _mla_absorb_weights(p, cfg: ModelConfig):

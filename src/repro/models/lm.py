@@ -187,19 +187,19 @@ def _block_decode_paged(p, x, rope_pos, write_pos, pool, table_rows, cfg,
     return x + y2, pool
 
 
-def _block_prefill_paged(p, x, pos, prefix_len, pool, table_rows, cfg,
+def _block_prefill_chunk(p, x, start_len, chunk_len, pool, table_rows, cfg,
                          *, backend="auto"):
-    """Attention-mixer block suffix prefill reading a cached prefix from a
-    paged KV pool (see ``models/attention.py`` for the page-table
-    convention).  Returns (x, raw suffix mixer cache)."""
+    """Attention-mixer block chunked prefill straight against a paged KV pool
+    (see ``models/attention.py`` for the chunk contract).  Returns
+    (x, updated pool)."""
     h = L.apply_norm(p["norm1"], x)
     if cfg.mixer == "attention":
-        y, kv = A.gqa_prefill_paged(
-            p["mixer"], h, pos, pool, table_rows, prefix_len, cfg,
+        y, pool = A.gqa_prefill_chunk(
+            p["mixer"], h, pool, table_rows, start_len, chunk_len, cfg,
             backend=backend)
     elif cfg.mixer == "mla":
-        y, kv = A.mla_prefill_paged(
-            p["mixer"], h, pos, pool, table_rows, prefix_len, cfg,
+        y, pool = A.mla_prefill_chunk(
+            p["mixer"], h, pool, table_rows, start_len, chunk_len, cfg,
             backend=backend)
     else:
         raise ValueError(f"paged prefill needs an attention mixer, got {cfg.mixer}")
@@ -209,14 +209,15 @@ def _block_prefill_paged(p, x, pos, prefix_len, pool, table_rows, cfg,
         y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
     else:
         y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
-    return x + y2, kv
+    return x + y2, pool
 
 
-def lm_prefill_paged(
+def lm_prefill_chunk(
     p: Params,
-    tokens: jax.Array,            # [B, T] int32 suffix tokens (right-padded)
+    tokens: jax.Array,            # [B, T] int32 chunk tokens (right-padded)
     cache: Any,                   # pools from init_paged_cache
-    prefix_len: jax.Array,        # [B] int32 cached-prefix length per row
+    start_len: jax.Array,         # [B] int32 tokens already in the pages
+    chunk_len: jax.Array,         # [B] int32 valid rows of this chunk (<= T)
     table_rows: jax.Array,        # [B, P] int32 page table
     cfg: ModelConfig,
     *,
@@ -224,28 +225,28 @@ def lm_prefill_paged(
     last_idx=None,
     embeds: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any]:
-    """Suffix-only prefill: process only the uncached tail of each prompt,
-    with attention reading the cached prefix (positions ``< prefix_len[b]``)
-    straight from the paged pools.  Row ``b``'s suffix token ``t`` sits at
-    logical position ``prefix_len[b] + t``.  Returns per-row logits gathered
-    at ``last_idx`` and the *raw* suffix KV ``[L, B, T, ...]`` ready for the
-    page scatter — the shared-prefix analog of
-    ``lm_prefill(..., raw_cache=True)``.
+    """Chunked prefill: process one ``[B, T]`` prompt chunk per slot, KV
+    scattered straight into the paged pools, attention reading every earlier
+    token (cached prefix pages and prior chunks alike) through the page
+    table.  Row ``b``'s chunk token ``t`` sits at logical position
+    ``start_len[b] + t``.  Returns per-row logits gathered at ``last_idx``
+    (only meaningful on a prompt's final chunk) and the updated pools — the
+    pools ride the layer scan as ys, exactly like :func:`lm_decode_paged`.
     """
     b, t = tokens.shape[:2]
-    pos = prefix_len[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
     x = _embed_in(p, tokens, cfg, embeds)
 
     def body(x, inp):
         lp, pool = inp
-        x, kv = _block_prefill_paged(
-            lp, x, pos, prefix_len, pool, table_rows, cfg, backend=backend)
-        return x, kv
+        x, pool = _block_prefill_chunk(
+            lp, x, start_len, chunk_len, pool, table_rows, cfg,
+            backend=backend)
+        return x, pool
 
-    x, raw = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
+    x, pools = jax.lax.scan(body, x, (p["layers"], cache["layers"]))
     idx = last_idx if last_idx is not None else jnp.full((b,), t - 1, jnp.int32)
     x_last = x[jnp.arange(b), idx][:, None]
-    return _lm_head(p, x_last, cfg, backend)[:, 0], {"layers": raw}
+    return _lm_head(p, x_last, cfg, backend)[:, 0], {"layers": pools}
 
 
 # ------------------------------------------------------------- LM wiring ----

@@ -8,14 +8,20 @@ from a fixed-slot continuous batcher backed by a **paged KV cache**:
   (``serving/kv_cache.py``); a host-side pager hands pages to requests on
   admission and reclaims them on finish, so cache memory tracks live tokens;
 - arriving requests are admitted *in batches*: the scheduler
-  (``serving/scheduler.py``) groups the runnable queue prefix into length
-  buckets and each bucket prefills **jointly** — one compiled ``[n, blen]``
-  trace per bucket instead of one B=1 trace per request — and the raw prefix
-  KV is scattered straight into the pages (no per-slot cache merging);
-- every engine step decodes ONE token for all active slots straight against
-  the pages (W4A16 matmuls; on TPU the Pallas paged-attention kernel DMAs
-  pages by block table inside the grid, on CPU/XLA the jnp gather reference
-  runs — ``cfg.paged_attn_impl``), sampling **per-slot** temperatures;
+  (``serving/scheduler.py``) assigns slots and pages to the runnable queue
+  prefix; the prompt tokens themselves prefill in **chunks** under a token
+  budget (``max_prefill_tokens``, vLLM/Sarathi-style **mixed steps**): every
+  engine step packs up to the budget in prefill-chunk rows *and* decodes all
+  active slots, so a long arriving prompt never stalls in-flight decodes.
+  Chunks scatter their KV straight into the pages and attend the cached
+  prefix + earlier chunks *through the page table* — the same paged
+  machinery decode uses (Pallas chunked-prefill grid on TPU, jnp gather
+  oracle on CPU — ``cfg.paged_attn_impl``); a slot's final chunk yields its
+  first-token logits.  ``max_prefill_tokens=None`` prefills each prompt in
+  one chunk (stop-the-world baseline);
+- every engine step decodes ONE token for all slots past their prefill
+  target straight against the pages (W4A16 matmuls), sampling **per-slot**
+  temperatures;
 - with ``cfg.kv_quant`` the pools are int8 + per-row f32 scales: prefix rows
   are quantized on admission, decode tokens before their pool write;
 - finished slots free their pages immediately and are refilled from the
@@ -178,6 +184,10 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.pos = np.zeros(batch_size, np.int32)      # next position per slot
         self.last_tok = np.zeros(batch_size, np.int32)
+        # prompt length each slot must reach before decoding: a slot is
+        # *prefilling* while pos < pref_target (its chunk cursor is pos) and
+        # *decoding* once pos >= pref_target
+        self.pref_target = np.zeros(batch_size, np.int32)
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self._swapped: dict[int, _SwapState] = {}   # submit_seq -> swap image
@@ -192,23 +202,20 @@ class ServingEngine:
             ),
             donate_argnums=(1,),
         )
-        # joint length-bucketed prefill: raw prefix KV + per-row last logits.
-        # jit re-specializes per (n, bucket_len); the scheduler's power-of-two
-        # buckets keep that trace count O(log max_seq).
-        self._prefill = jax.jit(
-            lambda p, toks, last_idx: api.prefill_fn(
-                p, {"tokens": toks}, cfg, self.S, backend=backend,
-                last_idx=last_idx, raw_cache=True
-            )
-        )
-        # suffix-only prefill behind a cached prefix: reads the matched pages
-        # through the page table, prefills only the uncached tail (bucketed
-        # by *suffix* length).  The pools ride in read-only (not donated).
-        self._prefill_paged = jax.jit(
-            lambda p, toks, last_idx, pfx, table, pools: api.prefill_paged_fn(
-                p, {"tokens": toks}, pools, table, pfx, cfg, backend=backend,
-                last_idx=last_idx
-            )
+        # joint length-bucketed chunk prefill: each row is one [blen] prompt
+        # chunk at logical positions start_len[r] + t; KV scatters into the
+        # pages and attention reads every earlier token (cached prefix and
+        # prior chunks alike) through the table.  jit re-specializes per
+        # (n, bucket_len); the scheduler's power-of-two buckets keep that
+        # trace count O(log max_seq).  Pools donated: the chunk's output
+        # cache aliases the input buffers.
+        self._prefill_chunk = jax.jit(
+            lambda p, toks, last_idx, starts, lens, table, pools:
+                api.prefill_chunk_fn(
+                    p, {"tokens": toks}, pools, table, starts, lens, cfg,
+                    backend=backend, last_idx=last_idx
+                ),
+            donate_argnums=(6,),
         )
         self._sample = jax.jit(sample_per_slot)
 
@@ -293,6 +300,7 @@ class ServingEngine:
         self.slots[slot] = None
         self.pos[slot] = 0
         self.last_tok[slot] = 0
+        self.pref_target[slot] = 0
         self.stats.preemptions += 1
         self.stats.swapped_out_bytes += nbytes
 
@@ -309,6 +317,9 @@ class ServingEngine:
         self.slots[slot] = req
         self.pos[slot] = st.pos
         self.last_tok[slot] = st.last_tok
+        # a slot preempted mid-prefill resumes mid-prefill: its chunk cursor
+        # (pos) restores below pref_target and chunking picks it back up
+        self.pref_target[slot] = len(req.prompt)
         self.stats.resumes += 1
         self.stats.swapped_in_bytes += st.nbytes
 
@@ -352,16 +363,10 @@ class ServingEngine:
         reserve = (self.B - len(free)) if self.reservation == "lazy" else 0
         for bkt in self.sched.plan(self.queue, free, self.pager, reserve,
                                    self.cache):
-            n, blen = len(bkt.reqs), bkt.pad_len
             pfx = np.asarray(bkt.prefix_lens, np.int32)
-            toks = np.zeros((n, blen), np.int32)
-            lens = np.empty(n, np.int32)           # suffix lengths
-            for r, req in enumerate(bkt.reqs):
-                lens[r] = len(req.prompt) - pfx[r]
-                toks[r, : lens[r]] = req.prompt[pfx[r]:]
             # COW first: a page-aligned full match re-prefills the last
             # prompt token into a private copy of the final matched page,
-            # so the copies must exist before the prefill reads/writes them.
+            # so the copies must exist before any chunk reads/writes them.
             # The planner left a hold on each src pinning it against reuse
             # until its rows are duplicated here (one batched dispatch).
             pairs = [p for p in bkt.cow if p is not None]
@@ -373,53 +378,97 @@ class ServingEngine:
                 for src, _ in pairs:
                     self.pager.drop_hold(src)
                 self.stats.cow_copies += len(pairs)
-            if pfx.any():
-                rows_tbl = jnp.asarray(self.pager.table()[bkt.slots])
-                logits, raw = self._prefill_paged(
-                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
-                    jnp.asarray(pfx), rows_tbl, self.pools)
-            else:
-                logits, raw = self._prefill(
-                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
-            raw = {"layers": {k: v for k, v in raw["layers"].items()
-                              if k != "lens"}}
-            # int8 pools: quantize the raw prefix rows per-(position, head)
-            # so the scatter below writes codes + scale leaves in one pass
-            raw = api.quantize_raw_paged(raw, self.cfg)
-            rows = self.pager.table()[bkt.slots]           # [n, P]
-            page, off = KV.prefix_write_plan(lens, rows, self.PS, blen,
-                                             starts=pfx)
-            self.pools = KV.write_prefix(
-                self.pools, raw, jnp.asarray(page), jnp.asarray(off))
-            self.key, sk = jax.random.split(self.key)
-            temps = jnp.asarray([r.temperature for r in bkt.reqs], jnp.float32)
-            firsts = np.asarray(self._sample_reqs(logits, sk, temps, bkt.reqs))
-            now = time.perf_counter()
+            # admission stops here: the slot's chunk cursor starts at the
+            # cached-prefix length and the prompt tokens themselves prefill
+            # in budgeted chunks (:meth:`_prefill_chunks`), interleaved with
+            # decode steps
             for r, (slot, req) in enumerate(zip(bkt.slots, bkt.reqs)):
-                first = int(firsts[r])
-                req.output.append(first)
-                req.first_token_t = now
                 self.slots[slot] = req
-                self.pos[slot] = len(req.prompt)
-                self.last_tok[slot] = first
-                self.stats.prefilled_tokens += int(lens[r])
+                self.pos[slot] = int(pfx[r])
+                self.pref_target[slot] = len(req.prompt)
+                self.last_tok[slot] = 0
                 self.stats.admitted += 1
                 self.stats.prefix_matched_tokens += int(pfx[r])
                 self.stats.prefix_hits += int(pfx[r] > 0)
                 self.stats.pages_shared += bkt.shared[r]
-                if self.cache is not None:
-                    self._cache_insert_slot(slot)
+
+    def _prefill_chunks(self) -> int:
+        """Advance every prefilling slot by its scheduled chunk: pack up to
+        ``max_prefill_tokens`` chunk rows into power-of-two buckets (FCFS by
+        admission age), launch one fused ``[n, blen]`` chunk prefill per
+        bucket, and sample the first token on rows whose chunk completes the
+        prompt.  Returns the number of chunk rows worked."""
+        items = [(i, int(self.pos[i]), int(self.pref_target[i]))
+                 for i in sorted(
+                     (j for j in self._active_slots()
+                      if self.pos[j] < self.pref_target[j]),
+                     key=lambda j: self.slots[j].submit_seq)]
+        if not items:
+            return 0
+        worked = 0
+        for bkt in self.sched.plan_chunks(items):
+            n, blen = len(bkt.slots), bkt.pad_len
+            starts = np.asarray(bkt.starts, np.int32)
+            lens = np.asarray(bkt.lens, np.int32)
+            toks = np.zeros((n, blen), np.int32)
+            for r, slot in enumerate(bkt.slots):
+                req = self.slots[slot]
+                toks[r, : lens[r]] = req.prompt[starts[r]: starts[r] + lens[r]]
+            table = jnp.asarray(self.pager.table()[bkt.slots])
+            logits, self.pools = self._prefill_chunk(
+                self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
+                jnp.asarray(starts), jnp.asarray(lens), table, self.pools)
+            finals = [self.slots[s] if f else None
+                      for s, f in zip(bkt.slots, bkt.final)]
+            if any(bkt.final):
+                self.key, sk = jax.random.split(self.key)
+                temps = jnp.asarray(
+                    [r.temperature if r else 0.0 for r in finals], jnp.float32)
+                firsts = np.asarray(
+                    self._sample_reqs(logits, sk, temps, finals))
+                now = time.perf_counter()
+            for r, slot in enumerate(bkt.slots):
+                self.pos[slot] += int(lens[r])
+                self.stats.prefilled_tokens += int(lens[r])
+                worked += 1
+                if bkt.final[r]:
+                    req = self.slots[slot]
+                    first = int(firsts[r])
+                    req.output.append(first)
+                    req.first_token_t = now
+                    self.last_tok[slot] = first
+                    if self.cache is not None:
+                        self._cache_insert_slot(slot)
             self.stats.prefill_batches += 1
+        return worked
+
+    def _sync_cache_stats(self) -> None:
+        """Mirror the prefix cache's eviction counter into the engine stats.
+        Must run on *every* step exit — evictions happen during admission
+        (page alloc under pressure), so syncing only after a decode leaves
+        ``stats.pages_evicted`` stale on steps that admit + chunk-prefill but
+        have nothing to decode yet."""
+        if self.cache is not None:
+            self.stats.pages_evicted = self.cache.stats.evicted_pages
 
     # -------------------------------------------------------------- step ---
     def step(self) -> int:
-        """Admit waiting requests, grow/preempt page tables as needed, decode
-        one token for all active slots.  Returns number of active slots."""
+        """One mixed engine step: admit waiting requests, grow/preempt page
+        tables as needed, advance prefilling slots by one budgeted chunk
+        round, decode one token for every slot past its prefill target.
+        Returns the number of rows worked (decode slots + chunk rows)."""
         self._admit()
         self._ensure_pages()
-        active = self._active_slots()
-        if not active:
-            return 0
+        chunked = self._prefill_chunks()
+        # decode set AFTER chunking: a slot whose final chunk just sampled
+        # its first token decodes this same step (parity with the old
+        # admit-then-decode flow)
+        dec = [i for i in self._active_slots()
+               if self.pos[i] >= self.pref_target[i]]
+        if not dec:
+            self._sync_cache_stats()
+            self._drain_swap_buffers()
+            return chunked
         # pager tripwires: no active slot may point at the trash page, every
         # refcount must match the tables + swap holds, and the page under
         # each write cursor must be private (shared pages are read-only)
@@ -428,20 +477,32 @@ class ServingEngine:
             [s is not None for s in self.slots],
             refs=self.pager.refs(), held=self.pager.held(),
             cached=self.pager.cached_mask())
-        tok = jnp.asarray(self.last_tok[:, None])
-        pos = jnp.asarray(self.pos)
-        table = jnp.asarray(self.pager.table())
+        # mask mid-prefill rows out of the decode launch exactly like empty
+        # slots: trash-page table rows absorb the dummy KV write and the row's
+        # logits are discarded — so their real pages never see a stray write
+        dset = set(dec)
+        tbl_np = self.pager.table().copy()
+        pos_np = self.pos.copy()
+        tok_np = self.last_tok.copy()
+        for i in range(self.B):
+            if i not in dset:
+                tbl_np[i] = KV.TRASH_PAGE
+                pos_np[i] = 0
+                tok_np[i] = 0
+        tok = jnp.asarray(tok_np[:, None])
+        pos = jnp.asarray(pos_np)
+        table = jnp.asarray(tbl_np)
         logits, self.pools = self._decode(self.params, self.pools, tok, pos, table)
         self.key, sk = jax.random.split(self.key)
+        rows = [self.slots[i] if i in dset else None for i in range(self.B)]
         temps = jnp.asarray([
-            self.slots[i].temperature if self.slots[i] else 0.0
-            for i in range(self.B)
+            r.temperature if r else 0.0 for r in rows
         ], jnp.float32)
-        nxt = np.asarray(self._sample_reqs(logits, sk, temps, self.slots))
+        nxt = np.asarray(self._sample_reqs(logits, sk, temps, rows))
         self.stats.steps += 1
-        self.stats.max_active = max(self.stats.max_active, len(active))
-        self.stats.active_slot_steps += len(active)
-        for i in active:
+        self.stats.max_active = max(self.stats.max_active, len(dec))
+        self.stats.active_slot_steps += len(dec)
+        for i in dec:
             req = self.slots[i]
             t = int(nxt[i])
             req.output.append(t)
@@ -465,11 +526,11 @@ class ServingEngine:
                 self.slots[i] = None   # slot freed → continuous batching
                 self.pos[i] = 0
                 self.last_tok[i] = 0
+                self.pref_target[i] = 0
                 self.pager.free_slot(i)
-        if self.cache is not None:
-            self.stats.pages_evicted = self.cache.stats.evicted_pages
+        self._sync_cache_stats()
         self._drain_swap_buffers()
-        return len(active)
+        return len(dec) + chunked
 
     def _drain_swap_buffers(self) -> None:
         """Finish pending swap-out transfers: the async device→host copy
@@ -485,16 +546,22 @@ class ServingEngine:
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         """Step until queue and slots are empty.  ``max_steps`` bounds *all*
-        iterations, idle ones included.  An iteration that decodes nothing
+        iterations, idle ones included.  An iteration that works nothing
         while requests still wait means admission is stalled — the drain is
         single-threaded and deterministic, so no later iteration could do
         better — and raises immediately, naming the blocked head, instead of
         spinning to the ceiling (``stats.steps`` only counts decoding steps,
-        so the old guard never tripped on an admission stall)."""
+        so the old guard never tripped on an admission stall).  Hitting the
+        ceiling with work still pending also raises: a silent return here
+        used to hand back truncated outputs that looked complete."""
         iters = 0
         while (self.queue or any(s is not None for s in self.slots)):
             if iters >= max_steps:
-                break
+                raise RuntimeError(
+                    f"run_until_drained hit max_steps={max_steps} with work "
+                    f"left: {len(self.queue)} queued, "
+                    f"{sum(s is not None for s in self.slots)} active "
+                    f"slot(s) — raise max_steps or shrink the workload")
             iters += 1
             if self.step() == 0 and self.queue:
                 self.stats.idle_steps += 1

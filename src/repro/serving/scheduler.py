@@ -8,10 +8,16 @@ prefill and the number of distinct traces stays O(log max_seq) instead of
 O(#prompt lengths).
 
 Admission is strict FCFS: the queue head is admitted only if a free slot and
-enough free pages exist; nothing behind it jumps ahead (no starvation).  A
-``max_prefill_tokens`` budget bounds the padded tokens prefilled in a single
-engine step — oversized backlogs are drained in chunks across steps so decode
-latency of in-flight requests stays bounded.
+enough free pages exist; nothing behind it jumps ahead (no starvation).
+
+**Mixed steps** (:meth:`Scheduler.plan_chunks`): admission only assigns slots
+and pages — the prompt tokens themselves prefill in *chunks*.  Every engine
+step packs up to ``max_prefill_tokens`` actual chunk tokens across the slots
+still prefilling (per-slot chunk cursor = tokens already written) alongside
+the step's decode batch, vLLM/Sarathi-style, so long prompts drain across
+consecutive steps while decode inter-token latency stays bounded.  Non-final
+chunks end on page boundaries (later chunks start page-aligned); the head
+always makes progress even when the budget is smaller than a page.
 
 **Page reservation** (``reservation=``): ``"lazy"`` (default) reserves only
 the pages covering the prompt plus one decode token — the engine grows the
@@ -67,6 +73,30 @@ class PrefillBucket:
     # (src, dst) pool pages whose rows the engine must copy before prefill
 
 
+@dataclasses.dataclass
+class ChunkBucket:
+    """One fused ``[n, pad_len]`` prefill-chunk launch of a mixed step."""
+    pad_len: int          # padded chunk length (power of two of page_size)
+    slots: List[int]      # engine slot per row
+    starts: List[int]     # tokens already written per row (chunk cursor)
+    lens: List[int]       # valid chunk tokens per row (<= pad_len)
+    final: List[bool]     # True when this chunk completes the row's prompt
+
+
+@dataclasses.dataclass
+class _AdmissionCost:
+    """Page arithmetic for admitting one request — the single source shared
+    by :meth:`Scheduler.plan` and its diagnostic twin
+    :meth:`Scheduler.pages_needed`, so the admission-stall report can never
+    drift from what admission actually charges."""
+    total: int            # pages covering _tokens_wanted, ignoring the cache
+    matched: list         # cached whole pages the prefix cache matched
+    mtok: int             # tokens those pages cover
+    full_match: bool      # page-aligned whole-prompt match (needs a COW)
+    fresh: int            # pages to allocate (incl. the COW destination)
+    pinned: int           # matched-but-unreferenced pages the attach pins
+
+
 class Scheduler:
     def __init__(self, *, page_size: int, max_seq: int,
                  max_prefill_tokens: Optional[int] = None,
@@ -75,6 +105,9 @@ class Scheduler:
             raise ValueError(f"unknown prefill mode {mode!r}")
         if reservation not in ("lazy", "worstcase"):
             raise ValueError(f"unknown page reservation {reservation!r}")
+        if max_prefill_tokens is not None and max_prefill_tokens < 1:
+            raise ValueError(
+                f"max_prefill_tokens must be >= 1, got {max_prefill_tokens}")
         self.page_size = page_size
         self.max_seq = max_seq
         self.max_prefill_tokens = max_prefill_tokens
@@ -94,18 +127,33 @@ class Scheduler:
         # engine grows the table page-by-page as decode proceeds
         return min(len(req.prompt) + 1, self.max_seq)
 
-    def pages_needed(self, req, pool: PagePool, cache=None) -> int:
-        """Fresh-page cost of admitting ``req`` (cold total without
-        ``cache``; with it, the matched whole-page prefix is subtracted and a
-        page-aligned full match pays one extra page for its COW copy) —
-        diagnostic twin of the arithmetic :meth:`plan` performs."""
+    def _admission_cost(self, req, pool: PagePool, cache=None) -> _AdmissionCost:
+        """The one admission page-arithmetic path (used by both :meth:`plan`
+        and :meth:`pages_needed`): cold total, cache-matched prefix credit,
+        the full-match COW page, and the matched-but-unreferenced pages the
+        attach is about to pin (which must not double as evictable headroom
+        for the fresh allocation)."""
         total = pool.pages_needed(self._tokens_wanted(req))
         if cache is None:
-            return total
-        matched, mtok = cache.match(
-            req.prompt, hashes=getattr(req, "_block_hashes", None))
+            return _AdmissionCost(total, [], 0, False, total, 0)
+        # chain hashes are pure in the prompt tokens: compute them once per
+        # request, not once per engine step while blocked
+        hs = getattr(req, "_block_hashes", None)
+        if hs is None:
+            hs = req._block_hashes = cache.block_hashes(req.prompt)
+        matched, mtok = cache.match(req.prompt, hashes=hs)
         full_match = bool(matched) and mtok == len(req.prompt)
-        return total - len(matched) + (1 if full_match else 0)
+        fresh = total - len(matched) + (1 if full_match else 0)
+        pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
+        return _AdmissionCost(total, matched, mtok, full_match, fresh, pinned)
+
+    def pages_needed(self, req, pool: PagePool, cache=None) -> int:
+        """Pages that must be allocatable to admit ``req`` — the diagnostic
+        twin of :meth:`plan`, sharing its arithmetic via
+        :meth:`_admission_cost` (fresh pages plus the matched-but-unreferenced
+        pages the attach would pin)."""
+        cost = self._admission_cost(req, pool, cache)
+        return cost.fresh + cost.pinned
 
     def plan(self, queue: Deque, free_slots: List[int], pool: PagePool,
              reserve: int = 0, cache=None) -> List[PrefillBucket]:
@@ -131,31 +179,21 @@ class Scheduler:
             # without re-chain-hashing a long prompt every engine step
             if not pool.can_alloc(1 + reserve):
                 break
-            if cache is not None:       # not truthiness: empty index matches
-                # chain hashes are pure in the prompt tokens: compute them
-                # once per request, not once per engine step while blocked
-                hs = getattr(req, "_block_hashes", None)
-                if hs is None:
-                    hs = req._block_hashes = cache.block_hashes(req.prompt)
-                matched, mtok = cache.match(req.prompt, hashes=hs)
-            else:
-                matched, mtok = [], 0
+            cost = self._admission_cost(req, pool, cache)
+            matched, full_match = cost.matched, cost.full_match
+            fresh = cost.fresh
             # never admit a zero-token prefill: the engine samples the first
             # output from the last prompt token's logits, so a page-aligned
             # full match re-prefills that one token into a COW'd private
             # copy of the final matched page
-            full_match = matched and mtok == t
-            suffix = 1 if full_match else t - mtok
+            suffix = 1 if full_match else t - cost.mtok
             prefix = t - suffix
-            total = pool.pages_needed(self._tokens_wanted(req))
-            fresh = total - len(matched) + (1 if full_match else 0)
             # matched-but-unreferenced pages are about to be *pinned* by the
             # attach below, so they must not be double-counted as evictable
             # headroom for the fresh allocation — otherwise attach + grow
             # would blow up on a pool whose only evictable pages are the very
             # ones this request is re-using
-            pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
-            if not pool.can_alloc(fresh + reserve + pinned):
+            if not pool.can_alloc(fresh + reserve + cost.pinned):
                 break                       # FCFS: head blocks the line
             blen = (suffix if self.mode == "slotwise"
                     else self.bucket_len(suffix))
@@ -188,4 +226,52 @@ class Scheduler:
             bkt.shared.append(shared)
             bkt.cow.append(cow_pair)
             spent += blen
+        return list(buckets.values())
+
+    def plan_chunks(self, prefilling: List[Tuple[int, int, int]],
+                    budget: Optional[int] = None) -> List[ChunkBucket]:
+        """Token-budget mixed-step chunk planning (vLLM/Sarathi-style).
+
+        ``prefilling`` is ``[(slot, written, target)]`` in FCFS order:
+        ``written`` counts tokens already in the slot's pages (cached prefix
+        plus earlier chunks — the per-slot chunk cursor), ``target`` the
+        prompt length the prefill must reach.  Each call packs up to
+        ``budget`` actual chunk tokens (default ``max_prefill_tokens``;
+        ``None`` = everything) and groups the chunks into power-of-two
+        buckets like :meth:`plan`, so one engine step launches O(1) fused
+        ``[n, pad_len]`` chunk prefills alongside its decode batch.
+
+        Non-final chunks end on a page boundary, keeping every later chunk's
+        start page-aligned (whole prefix pages for the kernel grid, clean
+        scatter).  When the budget is smaller than the distance to the next
+        boundary, the unaligned chunk is taken anyway — progress beats
+        alignment, and the next call re-aligns.  The queue head always gets
+        at least one token, so a budget below every chunk size still drains.
+        """
+        if budget is None:
+            budget = self.max_prefill_tokens
+        left = budget
+        buckets: dict = {}
+        for slot, written, target in prefilling:
+            remaining = target - written
+            if remaining <= 0:
+                continue
+            c = remaining if left is None else min(remaining, left)
+            if c <= 0:
+                break                       # budget exhausted: FCFS tail waits
+            if c < remaining:
+                aligned = ((written + c) // self.page_size) * self.page_size
+                if aligned > written:
+                    c = aligned - written
+            blen = c if self.mode == "slotwise" else self.bucket_len(c)
+            key = blen if self.mode == "bucketed" else (blen, slot)
+            bkt = buckets.get(key)
+            if bkt is None:
+                bkt = buckets[key] = ChunkBucket(blen, [], [], [], [])
+            bkt.slots.append(slot)
+            bkt.starts.append(written)
+            bkt.lens.append(c)
+            bkt.final.append(written + c == target)
+            if left is not None:
+                left -= c
         return list(buckets.values())

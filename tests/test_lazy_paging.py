@@ -51,6 +51,7 @@ def test_pager_randomized_stress_interleaved_ops():
     pool = KV.PagePool(num_pages=NP, page_size=PS, batch_size=B,
                        max_pages_per_slot=MAXP)
     cache = PrefixCache(pool, PS, mode="stress")
+    sched = Scheduler(page_size=PS, max_seq=MAXP * PS)
     stems = [list(rng.integers(0, 3, 8)) for _ in range(3)]   # shared prefixes
     live: dict[int, dict] = {}             # slot -> {tokens, written}
     swapped: list[dict] = []               # swap states
@@ -63,6 +64,15 @@ def test_pager_randomized_stress_interleaved_ops():
         full = bool(matched) and mtok == t
         total = pool.pages_needed(t + 1)
         fresh = total - len(matched) + (1 if full else 0)
+        pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
+        # the scheduler's diagnostic twin must charge exactly what this
+        # admission takes from the pool (fresh allocations plus the
+        # matched-but-unreferenced pages the attach pins) — pages_needed
+        # and plan() share one arithmetic path, asserted against the
+        # harness's independent bookkeeping at every admission state
+        req = Request(uid=slot, prompt=np.asarray(toks, np.int32),
+                      max_tokens=1)
+        assert sched.pages_needed(req, pool, cache) == fresh + pinned
         if total > MAXP or not pool.can_alloc(fresh):
             return
         if matched:
