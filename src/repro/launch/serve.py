@@ -60,6 +60,20 @@ def main(argv=None):
                     help="give every synthetic request this many identical "
                          "leading prompt tokens (a shared system prompt) so "
                          "the prefix cache has something to hit")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded waiting line: submit() sheds load "
+                         "(finish_reason='rejected') past this depth")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request total wall budget from arrival; "
+                         "expired requests free their pages immediately")
+    ap.add_argument("--ttft-deadline-s", type=float, default=None,
+                    help="per-request first-token budget from arrival")
+    ap.add_argument("--chaos", action="store_true",
+                    help="install a seeded FaultPlan firing at every "
+                         "injection site and serve non-strict (graceful "
+                         "degradation demo: the drain must survive)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --chaos fault plan")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -85,6 +99,19 @@ def main(argv=None):
               f"{rep.fp_bytes/1e6:.1f}MB -> {rep.quant_bytes/1e6:.1f}MB "
               f"in {time.time()-t0:.1f}s")
 
+    fault_plan = None
+    if args.chaos:
+        from repro.serving.faults import FaultPlan, FaultSpec
+        fault_plan = FaultPlan([
+            FaultSpec("page_alloc", every=11, times=3),
+            FaultSpec("page_grow", prob=0.05, times=3),
+            FaultSpec("pool_pressure", step=4, value=2, duration=3),
+            FaultSpec("swap_drain", op=0, times=1),
+            FaultSpec("swap_corrupt", op=1, times=1),
+            FaultSpec("prefix_evict", every=5, times=2),
+            FaultSpec("decode_launch", step=6, times=2),
+            FaultSpec("prefill_launch", op=2, times=1),
+        ], seed=args.fault_seed)
     eng = ServingEngine(params, cfg, batch_size=args.batch_size,
                         max_seq=args.max_seq, backend="xla",
                         page_size=args.page_size,
@@ -92,27 +119,44 @@ def main(argv=None):
                         prefill_mode=args.prefill_mode,
                         max_prefill_tokens=args.max_prefill_tokens,
                         reservation=args.reservation,
-                        prefix_cache=args.prefix_cache == "on")
+                        prefix_cache=args.prefix_cache == "on",
+                        max_queue=args.max_queue,
+                        fault_plan=fault_plan,
+                        strict=not args.chaos)
     rng = np.random.default_rng(0)
-    arrive = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    # deadlines are wall-clock budgets from arrival: rebase the synthetic
+    # Poisson offsets onto the engine's clock, or every request would look
+    # minutes old at its first deadline check
+    base = time.perf_counter()
+    arrive = base + np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     sys_p = rng.integers(2, cfg.vocab_size,
                          args.shared_prefix_len).astype(np.int32)
     reqs = [Request(uid=i,
                     prompt=np.concatenate(
                         [sys_p,
                          rng.integers(2, cfg.vocab_size, 10).astype(np.int32)]),
-                    max_tokens=args.max_tokens, arrival_t=float(arrive[i]))
+                    max_tokens=args.max_tokens, arrival_t=float(arrive[i]),
+                    deadline_s=args.deadline_s,
+                    ttft_deadline_s=args.ttft_deadline_s)
             for i in range(args.requests)]
     t0 = time.perf_counter()
-    for r in reqs:
-        eng.submit(r)
+    accepted = sum(eng.submit(r) for r in reqs)
     stats = eng.run_until_drained()
     dt = time.perf_counter() - t0
-    lat = np.mean([(r.done_t - r.first_token_t) / max(len(r.output) - 1, 1)
-                   for r in reqs if r.done_t and r.first_token_t])
-    print(f"served {stats.completed}/{args.requests} requests, "
+    served = [r for r in reqs if r.done_t and r.first_token_t
+              and r.finish_reason in ("completed", "length")]
+    lat = (float(np.mean([(r.done_t - r.first_token_t)
+                          / max(len(r.output) - 1, 1) for r in served]))
+           if served else float("nan"))
+    print(f"served {stats.completed}/{args.requests} requests "
+          f"({accepted} accepted), "
           f"{stats.decoded_tokens} tokens in {dt:.2f}s  "
           f"({stats.decoded_tokens/dt:.1f} tok/s, {lat*1e3:.1f} ms/token)")
+    print(f"lifecycle: rejected={stats.rejected} expired={stats.expired} "
+          f"cancelled={stats.cancelled} failed={stats.failed} "
+          f"retries={stats.retries} faults_injected={stats.faults_injected}")
+    if fault_plan is not None:
+        print(f"chaos: fault log {fault_plan.log}")
     print(f"pager: peak concurrency {stats.max_active}/{args.batch_size}, "
           f"{stats.grown_pages} pages grown lazily, "
           f"{stats.preemptions} preemptions "

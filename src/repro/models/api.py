@@ -138,6 +138,31 @@ def scatter_pool_rows(pools, rows, pages: jax.Array):
         pools, rows)
 
 
+def swap_image_checksum(rows) -> int:
+    """CRC-32 over a *host-materialized* swap image (the
+    :func:`gather_pool_rows` tree after ``jax.device_get``).
+
+    Folded leaf-by-leaf in ``jax.tree.leaves`` order, so the checksum covers
+    every leaf of every pool kind — fp16 K/V, MLA latents, int8 codes and
+    their f32 scale leaves alike.  The engine records it when the swap-out
+    drain lands and re-verifies at swap-in: a mismatch means the host buffer
+    was corrupted while the request waited off-device, and the victim
+    re-prefills from tokens instead of resuming poisoned KV state.
+
+    Host-only by design — call it on numpy trees; hashing a live device
+    array would force a blocking transfer in the middle of the step loop.
+    """
+    import zlib
+
+    import numpy as np
+
+    crc = 0
+    for leaf in jax.tree.leaves(rows):
+        a = np.asarray(leaf)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def copy_pool_page(pools, src: jax.Array, dst: jax.Array):
     """Copy-on-write helper: duplicate pool page(s) ``src`` into ``dst``

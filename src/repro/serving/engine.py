@@ -70,9 +70,33 @@ import numpy as np
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import api
 from repro.serving import kv_cache as KV
+from repro.serving.faults import (FaultPlan, SimulatedDeviceError,
+                                  TransientFault, corrupt_host_image)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_per_slot
 from repro.serving.scheduler import Scheduler
+
+#: Terminal states every submitted request reaches exactly one of:
+#:   completed — decoded its EOS token
+#:   length    — hit max_tokens or the max_seq cache cap
+#:   deadline  — expired a TTFT/total deadline (queued, swapped, or active)
+#:   cancelled — explicit :meth:`ServingEngine.cancel`
+#:   rejected  — refused at :meth:`ServingEngine.submit` (validation or
+#:               bounded-queue backpressure); never entered the queue
+#:   failed    — gave up after exhausting its fault-retry budget, or was
+#:               quarantined by a non-strict engine (invariant violation /
+#:               admission stall)
+FINISH_REASONS = ("completed", "length", "deadline", "cancelled", "rejected",
+                  "failed")
+
+
+class RejectedRequest(ValueError):
+    """Raised by :meth:`ServingEngine.submit` for *invalid* requests (empty
+    prompt, non-positive ``max_tokens``, over-long prompt).  The request is
+    marked terminal (``finish_reason="rejected"``, ``error`` says why) before
+    the raise, so callers that catch still see a structured outcome.
+    Bounded-queue backpressure does **not** raise — a full queue is an
+    operational condition, not a caller bug — it returns ``False``."""
 
 
 @dataclasses.dataclass
@@ -84,11 +108,22 @@ class Request:
     top_k: int = 0                # 0 disables (per-request, incl. first token)
     top_p: float = 1.0            # 1.0 disables
     arrival_t: float = 0.0
+    deadline_s: Optional[float] = None       # total wall budget from arrival
+    ttft_deadline_s: Optional[float] = None  # first-token budget from arrival
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    finish_reason: Optional[str] = None      # one of FINISH_REASONS when done
+    error: Optional[str] = None              # detail for rejected/failed
+    retries: int = 0              # transient-fault retries charged so far
+    reprefills: int = 0           # swap-corruption re-prefills (budget: 1)
     submit_seq: int = -1          # FCFS age; youngest (max) is preempted first
+    # swap-corruption replay: the token that must feed the next decode step
+    # after the re-prefill lands (instead of sampling a duplicate), and how
+    # many output tokens were folded into the prompt by the re-prefill
+    _replay_tok: Optional[int] = None
+    _gen_in_prompt: int = 0
 
 
 @dataclasses.dataclass
@@ -104,6 +139,9 @@ class _SwapState:
     last_tok: int                 # token feeding the next decode step
     nbytes: int                   # swap buffer size (stats)
     on_host: bool = False         # rows materialized to numpy (device freed)
+    checksum: Optional[int] = None  # CRC-32 of the host image (drain time)
+    corrupted: bool = False       # injected rot already applied (flip once —
+                                  # a second XOR would flip the byte *back*)
 
 
 @dataclasses.dataclass
@@ -129,6 +167,13 @@ class EngineStats:
     pages_inserted: int = 0       # pages newly indexed by the cache
     pages_evicted: int = 0        # unreferenced cached pages reclaimed (LRU)
     cow_copies: int = 0           # copy-on-write page duplications
+    # request lifecycle / graceful degradation:
+    rejected: int = 0             # refused at submit (validation/backpressure)
+    expired: int = 0              # terminal by TTFT/total deadline
+    cancelled: int = 0            # terminal by cancel()
+    failed: int = 0               # terminal by retry exhaustion / quarantine
+    retries: int = 0              # fault recoveries attempted (all kinds)
+    faults_injected: int = 0      # FaultPlan fires observed (mirror of plan)
 
 
 class ServingEngine:
@@ -148,6 +193,10 @@ class ServingEngine:
         prefill_mode: str = "bucketed",
         reservation: str = "lazy",
         prefix_cache: bool = False,
+        max_queue: Optional[int] = None,
+        strict: bool = True,
+        fault_plan: Optional[FaultPlan] = None,
+        retry_budget: int = 3,
     ):
         ok, why = api.paged_supported(cfg)
         if not ok:
@@ -193,6 +242,24 @@ class ServingEngine:
         self._swapped: dict[int, _SwapState] = {}   # submit_seq -> swap image
         self._next_seq = 0                             # FCFS submission clock
 
+        # ----- request lifecycle / graceful degradation -----
+        # max_queue bounds the waiting line: submit() rejects (structured,
+        # finish_reason="rejected") instead of growing without bound.  strict
+        # governs the abnormal paths: True (default) keeps every invariant
+        # violation / admission stall a hard raise (what tests want); False
+        # quarantines the offending request (finish_reason="failed") and
+        # keeps serving everyone else (what production wants).
+        self.max_queue = max_queue
+        self.strict = strict
+        self.retry_budget = retry_budget
+        self.faults = fault_plan
+        self.pager.faults = fault_plan
+        if self.cache is not None:
+            self.cache.faults = fault_plan
+        self._clock = time.perf_counter     # swappable in tests (deadlines)
+        self._step_idx = 0                  # all engine steps (idle included)
+        self._retry_pending = False         # last step skipped work on a fault
+
         # donate the pools: the step's output cache aliases the input buffers
         # instead of allocating a second full pool every decoded token
         self._decode = jax.jit(
@@ -220,14 +287,118 @@ class ServingEngine:
         self._sample = jax.jit(sample_per_slot)
 
     # ------------------------------------------------------------- admin ---
-    def submit(self, req: Request):
+    def _reject(self, req: Request, why: str, *, raise_: bool) -> bool:
+        """Structured rejection: the request turns terminal *now* — it never
+        enters the queue, never holds a page, and its ``finish_reason``
+        tells the caller exactly why."""
+        req.finish_reason = "rejected"
+        req.error = why
+        req.done_t = self._clock()
+        self.stats.rejected += 1
+        if raise_:
+            raise RejectedRequest(why)
+        return False
+
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns True on admission to the queue.
+
+        Invalid requests (empty prompt, ``max_tokens <= 0``, prompt longer
+        than ``max_seq - 1``) raise :class:`RejectedRequest` — a caller bug.
+        A full bounded queue (``max_queue``) rejects *without* raising and
+        returns False — backpressure is an operational signal the caller
+        handles by retrying later or shedding load.  Both paths mark the
+        request terminal with ``finish_reason="rejected"``.
+        """
+        if len(req.prompt) == 0:
+            return self._reject(req, "empty prompt", raise_=True)
+        if req.max_tokens <= 0:
+            return self._reject(
+                req, f"max_tokens must be >= 1, got {req.max_tokens}",
+                raise_=True)
         if len(req.prompt) > self.S - 1:
-            raise ValueError(
-                f"prompt of {len(req.prompt)} tokens exceeds max_seq-1={self.S - 1}")
-        req.arrival_t = req.arrival_t or time.perf_counter()
+            return self._reject(
+                req, f"prompt of {len(req.prompt)} tokens exceeds "
+                     f"max_seq-1={self.S - 1}", raise_=True)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return self._reject(
+                req, f"queue full ({self.max_queue} waiting)", raise_=False)
+        req.arrival_t = req.arrival_t or self._clock()
         req.submit_seq = self._next_seq
         self._next_seq += 1
         self.queue.append(req)
+        return True
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel the request with ``uid`` wherever it lives — waiting in the
+        queue, swapped out, or actively prefilling/decoding.  Its pages (and
+        any swap-hold pins) free immediately; tokens already generated stay
+        on ``req.output``.  Returns False when no live request has ``uid``
+        (already finished, or never submitted)."""
+        for r in list(self.queue):
+            if r.uid == uid:
+                self.queue.remove(r)
+                self._finish_abnormal(r, "cancelled")
+                return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._evict_slot(i, "cancelled")
+                return True
+        return False
+
+    # ------------------------------------------- terminal abnormal paths ---
+    def _finish_abnormal(self, req: Request, reason: str,
+                         error: Optional[str] = None) -> None:
+        """Turn a request terminal off the happy path (deadline / cancelled /
+        failed).  Cleans up any swap state it holds: the host image is
+        dropped and every kept-page swap hold released, so the pool sees the
+        pages again immediately."""
+        st = self._swapped.pop(req.submit_seq, None)
+        if st is not None:
+            for _, p in st.kept:
+                self.pager.drop_hold(p)
+        req.finish_reason = reason
+        req.error = error
+        req.done_t = self._clock()
+        counter = {"deadline": "expired", "cancelled": "cancelled",
+                   "failed": "failed"}[reason]
+        setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+
+    def _evict_slot(self, slot: int, reason: str,
+                    error: Optional[str] = None) -> None:
+        """Terminate the request occupying ``slot`` abnormally and free the
+        slot + its pages — the degradation primitive behind deadlines,
+        cancellation, and quarantine."""
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self.pref_target[slot] = 0
+        self.pager.free_slot(slot)
+        self._finish_abnormal(req, reason, error)
+
+    def _deadline_hit(self, req: Request, now: float) -> bool:
+        age = now - req.arrival_t
+        if req.deadline_s is not None and age > req.deadline_s:
+            return True
+        return (req.ttft_deadline_s is not None
+                and req.first_token_t is None
+                and age > req.ttft_deadline_s)
+
+    def _expire_deadlines(self) -> None:
+        """Per-request TTFT/total deadlines, checked every step: an expired
+        request turns terminal (``finish_reason="deadline"``) with its pages
+        freed — wherever it is (queued, swapped out, prefilling, decoding) —
+        instead of burning compute on an answer nobody is waiting for."""
+        if not any(r.deadline_s is not None or r.ttft_deadline_s is not None
+                   for r in list(self.queue) + self.slots if r is not None):
+            return
+        now = self._clock()
+        for r in [r for r in self.queue if self._deadline_hit(r, now)]:
+            self.queue.remove(r)
+            self._finish_abnormal(r, "deadline")
+        for i in self._active_slots():
+            if self._deadline_hit(self.slots[i], now):
+                self._evict_slot(i, "deadline")
 
     def _active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
@@ -252,8 +423,13 @@ class ServingEngine:
         n_gen = int(self.pos[slot]) - len(req.prompt)
         if n_gen <= 0:
             return np.asarray(req.prompt, np.int32)
+        # after a swap-corruption re-prefill the first _gen_in_prompt output
+        # tokens already live inside req.prompt; only the rest are "written
+        # beyond the prompt"
+        off = req._gen_in_prompt
         return np.concatenate([np.asarray(req.prompt, np.int32),
-                               np.asarray(req.output[:n_gen], np.int32)])
+                               np.asarray(req.output[off:off + n_gen],
+                                          np.int32)])
 
     def _cache_insert_slot(self, slot: int) -> None:
         """Index every full written page of ``slot`` (idempotent).  The
@@ -323,14 +499,32 @@ class ServingEngine:
         self.stats.resumes += 1
         self.stats.swapped_in_bytes += st.nbytes
 
-    def _ensure_pages(self) -> None:
+    def _charge_retry(self, slot: int, why: str) -> None:
+        """Charge one fault retry against the request in ``slot``; exhausting
+        the budget turns it terminal (``failed``) instead of livelocking."""
+        req = self.slots[slot]
+        req.retries += 1
+        self.stats.retries += 1
+        self._retry_pending = True
+        if req.retries > self.retry_budget:
+            self._evict_slot(
+                slot, "failed",
+                f"fault-retry budget exhausted ({self.retry_budget}): {why}")
+
+    def _ensure_pages(self) -> set:
         """Lazy growth: every active slot must own the pages covering its next
         write position before the decode step runs.  Oldest slots are grown
         first; on pool exhaustion the *youngest* active slot is preempted
         (repeatedly, until the grow fits) — possibly the growing slot itself,
-        which then simply leaves the batch until pages free up."""
+        which then simply leaves the batch until pages free up.
+
+        Returns the set of slots whose growth hit an injected transient
+        fault this step: they must sit out the decode launch (their table
+        doesn't cover the write position) and retry next step, each attempt
+        charged against the request's bounded retry budget."""
+        stalled: set = set()
         if self.reservation != "lazy":
-            return                     # worst-case reservation never grows
+            return stalled             # worst-case reservation never grows
         for i in sorted(self._active_slots(),
                         key=lambda j: self.slots[j].submit_seq):
             while self.slots[i] is not None:
@@ -338,12 +532,58 @@ class ServingEngine:
                 if len(self.pager.slot_pages(i)) >= need:
                     break
                 if self.pager.can_alloc(1):
-                    self.pager.grow(i, 1)
-                    self.stats.grown_pages += 1
+                    try:
+                        self.pager.grow(i, 1)
+                        self.stats.grown_pages += 1
+                    except TransientFault as e:
+                        self._charge_retry(i, str(e))
+                        stalled.add(i)
+                        break
                 else:
                     victim = max(self._active_slots(),
                                  key=lambda j: self.slots[j].submit_seq)
                     self._preempt(victim)
+        return stalled
+
+    def _verify_swap_image(self, req: Request) -> bool:
+        """Checksum-verify a drained swap image before its rows ever reach
+        the pool.  On mismatch the image is discarded (holds released) and
+        the request converts to a **re-prefill**: its written tokens (prompt
+        + generated) become the prefill target, and the decode resumes from
+        the restored last token — degraded (recompute) but never poisoned.
+        Returns False when the request must not resume by swap-in."""
+        st = self._swapped[req.submit_seq]
+        if (st.rows is None or not st.on_host or st.checksum is None
+                or api.swap_image_checksum(st.rows) == st.checksum):
+            return True
+        # poisoned host buffer detected — never scatter it
+        self._swapped.pop(req.submit_seq)
+        for _, p in st.kept:
+            self.pager.drop_hold(p)
+        req.reprefills += 1
+        self.stats.retries += 1
+        self._retry_pending = True
+        if req.reprefills > 1:      # re-prefill at most once
+            self.queue.remove(req)
+            self._finish_abnormal(
+                req, "failed", "swap image corrupted twice — giving up")
+            return False
+        n_gen = st.pos - len(req.prompt)
+        if n_gen > 0:
+            # replay prompt + generated tokens through prefill; the next
+            # decode must feed the already-sampled last token, not sample a
+            # duplicate from the final chunk's logits
+            req._replay_tok = st.last_tok
+            off = req._gen_in_prompt
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.output[off:off + n_gen], np.int32)])
+            req._gen_in_prompt = off + n_gen
+            if hasattr(req, "_block_hashes"):
+                del req._block_hashes   # memoized over the old prompt
+        # req stays at the queue head, now unswapped: plan() admits it as a
+        # fresh prefill (FCFS preserved — it was admitted first)
+        return False
 
     def _admit(self):
         free = [i for i, s in enumerate(self.slots) if s is None]
@@ -353,6 +593,8 @@ class ServingEngine:
         while self.queue and self.queue[0].submit_seq in self._swapped:
             if not free:
                 return
+            if not self._verify_swap_image(self.queue[0]):
+                break               # corrupted: head re-prefills (or failed)
             st = self._swapped[self.queue[0].submit_seq]
             reserve = self.B - len(free)          # watermark: active slots
             if not self.pager.can_alloc(len(st.private_lis) + reserve):
@@ -360,6 +602,14 @@ class ServingEngine:
             self._resume(free.pop(0), self.queue.popleft())
         if not free or not self.queue:
             return
+        # the planner must never see a swap-resumable request — they resume
+        # by swap-in only.  Normally they form a queue prefix fully handled
+        # above, but a corruption-converted head leaves its still-swapped
+        # siblings *behind* a plannable request: pull them out for the
+        # duration of the plan and splice them back in FCFS order after.
+        parked = [r for r in self.queue if r.submit_seq in self._swapped]
+        for r in parked:
+            self.queue.remove(r)
         reserve = (self.B - len(free)) if self.reservation == "lazy" else 0
         for bkt in self.sched.plan(self.queue, free, self.pager, reserve,
                                    self.cache):
@@ -391,6 +641,26 @@ class ServingEngine:
                 self.stats.prefix_matched_tokens += int(pfx[r])
                 self.stats.prefix_hits += int(pfx[r] > 0)
                 self.stats.pages_shared += bkt.shared[r]
+        if self.sched.last_plan_aborted and self.queue:
+            # a transient grow fault aborted the plan mid-admission; the
+            # scheduler rolled the victim back to the queue head.  Charge its
+            # bounded retry budget so an endlessly-faulting admission fails
+            # the request instead of livelocking the drain loop.
+            head = self.queue[0]
+            head.retries += 1
+            self.stats.retries += 1
+            self._retry_pending = True
+            if head.retries > self.retry_budget:
+                self.queue.popleft()
+                self._finish_abnormal(
+                    head, "failed",
+                    f"admission fault-retry budget exhausted "
+                    f"({self.retry_budget})")
+        if parked:
+            merged = sorted(list(self.queue) + parked,
+                            key=lambda r: r.submit_seq)
+            self.queue.clear()
+            self.queue.extend(merged)
 
     def _prefill_chunks(self) -> int:
         """Advance every prefilling slot by its scheduled chunk: pack up to
@@ -404,6 +674,13 @@ class ServingEngine:
                       if self.pos[j] < self.pref_target[j]),
                      key=lambda j: self.slots[j].submit_seq)]
         if not items:
+            return 0
+        if self.faults is not None and self.faults.fires("prefill_launch"):
+            # the launch died before any KV write (SimulatedDeviceError
+            # semantics) — every scheduled chunk simply retries next step;
+            # the charge is bounded so a permanently failing launch turns
+            # the oldest victim terminal instead of spinning
+            self._charge_retry(items[0][0], "prefill launch faulted")
             return 0
         worked = 0
         for bkt in self.sched.plan_chunks(items):
@@ -433,10 +710,18 @@ class ServingEngine:
                 worked += 1
                 if bkt.final[r]:
                     req = self.slots[slot]
-                    first = int(firsts[r])
-                    req.output.append(first)
-                    req.first_token_t = now
-                    self.last_tok[slot] = first
+                    if req._replay_tok is not None:
+                        # swap-corruption re-prefill just replayed already-
+                        # generated tokens: the "first token" of this prefill
+                        # was sampled long ago — restore the decode feed
+                        # instead of appending a duplicate
+                        self.last_tok[slot] = req._replay_tok
+                        req._replay_tok = None
+                    else:
+                        first = int(firsts[r])
+                        req.output.append(first)
+                        req.first_token_t = now
+                        self.last_tok[slot] = first
                     if self.cache is not None:
                         self._cache_insert_slot(slot)
             self.stats.prefill_batches += 1
@@ -453,30 +738,72 @@ class ServingEngine:
 
     # -------------------------------------------------------------- step ---
     def step(self) -> int:
-        """One mixed engine step: admit waiting requests, grow/preempt page
-        tables as needed, advance prefilling slots by one budgeted chunk
-        round, decode one token for every slot past its prefill target.
-        Returns the number of rows worked (decode slots + chunk rows)."""
+        """One mixed engine step: expire deadlines, admit waiting requests,
+        grow/preempt page tables as needed, advance prefilling slots by one
+        budgeted chunk round, decode one token for every slot past its
+        prefill target.  Returns the number of rows worked (decode slots +
+        chunk rows)."""
+        self._step_idx += 1
+        self._retry_pending = False
+        pre_injected = 0
+        if self.faults is not None:
+            self.faults.begin_step(self._step_idx)
+            pre_injected = self.faults.total_injected
+        self._expire_deadlines()
+        worked = self._step_inner()
+        self._sync_cache_stats()
+        if self.faults is not None:
+            self.stats.faults_injected = self.faults.total_injected
+            # any fire this step (e.g. a page_alloc outage rejecting an
+            # otherwise-fine admission) or an active pressure window means a
+            # zero-work step is fault-induced back-off, not a livelock — the
+            # drain guard must keep stepping instead of raising a stall
+            if (self.faults.total_injected > pre_injected
+                    or self.faults.pressure_active()):
+                self._retry_pending = True
+        self._drain_swap_buffers()
+        return worked
+
+    def _step_inner(self) -> int:
         self._admit()
-        self._ensure_pages()
+        stalled = self._ensure_pages()
         chunked = self._prefill_chunks()
         # decode set AFTER chunking: a slot whose final chunk just sampled
         # its first token decodes this same step (parity with the old
-        # admit-then-decode flow)
+        # admit-then-decode flow).  Slots whose lazy growth hit an injected
+        # fault sit the launch out — their tables don't cover the write
+        # position yet — and retry next step on their bounded budget.
         dec = [i for i in self._active_slots()
-               if self.pos[i] >= self.pref_target[i]]
+               if i not in stalled and self.pos[i] >= self.pref_target[i]]
         if not dec:
-            self._sync_cache_stats()
-            self._drain_swap_buffers()
             return chunked
         # pager tripwires: no active slot may point at the trash page, every
         # refcount must match the tables + swap holds, and the page under
         # each write cursor must be private (shared pages are read-only)
-        KV.assert_live_tables(
-            self.pager.table(), self.pos, self.PS,
-            [s is not None for s in self.slots],
-            refs=self.pager.refs(), held=self.pager.held(),
-            cached=self.pager.cached_mask())
+        try:
+            KV.assert_live_tables(
+                self.pager.table(), self.pos, self.PS,
+                [s is not None and i not in stalled
+                 for i, s in enumerate(self.slots)],
+                refs=self.pager.refs(), held=self.pager.held(),
+                cached=self.pager.cached_mask())
+        except KV.PagerInvariantError as e:
+            if self.strict or e.slot is None:
+                raise
+            # quarantine: fail the offending request, free what it held,
+            # keep serving everyone else.  Skip this launch (tables may be
+            # mid-repair); the next step re-checks from scratch.
+            self._evict_slot(int(e.slot), "failed",
+                             f"pager invariant violated: {e}")
+            self._retry_pending = True
+            return chunked
+        if self.faults is not None and self.faults.fires("decode_launch"):
+            # the launch died before dispatch — no KV write, no sample, no
+            # cursor moved — so retrying next step is always sound; the
+            # oldest decode slot carries the bounded charge
+            self._charge_retry(min(dec, key=lambda j: self.slots[j].submit_seq),
+                               "decode launch faulted")
+            return chunked
         # mask mid-prefill rows out of the decode launch exactly like empty
         # slots: trash-page table rows absorb the dummy KV write and the row's
         # logits are discarded — so their real pages never see a stray write
@@ -518,6 +845,7 @@ class ServingEngine:
             hit_cap = self.pos[i] >= self.S
             if hit_len or hit_eos or hit_cap:
                 req.done_t = time.perf_counter()
+                req.finish_reason = "completed" if hit_eos else "length"
                 self.stats.completed += 1
                 if self.cache is not None:
                     # index the generated full pages too before the refs
@@ -528,8 +856,6 @@ class ServingEngine:
                 self.last_tok[i] = 0
                 self.pref_target[i] = 0
                 self.pager.free_slot(i)
-        self._sync_cache_stats()
-        self._drain_swap_buffers()
         return len(dec) + chunked
 
     def _drain_swap_buffers(self) -> None:
@@ -538,22 +864,67 @@ class ServingEngine:
         materialize the rows to numpy now and drop the device-side gather
         buffer — otherwise a long-preempted request would keep its entire
         private-page image alive in device memory, which is exactly what
-        swap-out exists to release."""
+        swap-out exists to release.
+
+        Fault sites: ``swap_drain`` leaves an image "in flight" another step
+        (resume then device_gets it directly — correct, just not yet freed);
+        ``swap_corrupt`` flips a byte of a drained image *after* its CRC-32
+        was recorded, modelling host-buffer rot — the mismatch is caught at
+        swap-in (:meth:`_verify_swap_image`) and the victim re-prefills."""
         for st in self._swapped.values():
             if st.rows is not None and not st.on_host:
+                if (self.faults is not None
+                        and self.faults.fires("swap_drain")):
+                    continue                    # transfer "still in flight"
                 st.rows = jax.device_get(st.rows)
                 st.on_host = True
+                st.checksum = api.swap_image_checksum(st.rows)
+            if (st.on_host and st.rows is not None and not st.corrupted
+                    and self.faults is not None
+                    and self.faults.fires("swap_corrupt")):
+                st.rows = corrupt_host_image(st.rows)
+                st.corrupted = True
+
+    def _pending_report(self) -> str:
+        """Every unfinished request — uid, phase, progress — plus pager
+        occupancy, for the stall / max_steps raises: the operator sees the
+        full stuck set, not just the queue head."""
+        lines = []
+        for r in self.queue:
+            phase = ("swapped" if r.submit_seq in self._swapped else "queued")
+            lines.append(
+                f"  uid={r.uid} phase={phase} prompt={len(r.prompt)} "
+                f"out={len(r.output)}/{r.max_tokens} retries={r.retries}")
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            phase = ("prefilling" if self.pos[i] < self.pref_target[i]
+                     else "decoding")
+            lines.append(
+                f"  uid={r.uid} phase={phase} slot={i} pos={int(self.pos[i])} "
+                f"out={len(r.output)}/{r.max_tokens} retries={r.retries}")
+        lines.append(
+            f"  pager: free={self.pager.free_pages}/"
+            f"{self.pager.num_pages - 1} "
+            f"held={int(self.pager.held().sum())} "
+            f"evictable={self.pager.evictable_pages()} "
+            f"swapped_images={len(self._swapped)}")
+        return "\n".join(lines)
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         """Step until queue and slots are empty.  ``max_steps`` bounds *all*
         iterations, idle ones included.  An iteration that works nothing
         while requests still wait means admission is stalled — the drain is
         single-threaded and deterministic, so no later iteration could do
-        better — and raises immediately, naming the blocked head, instead of
-        spinning to the ceiling (``stats.steps`` only counts decoding steps,
-        so the old guard never tripped on an admission stall).  Hitting the
-        ceiling with work still pending also raises: a silent return here
-        used to hand back truncated outputs that looked complete."""
+        better — *unless* an injected/transient fault ate the step's work
+        (``_retry_pending``), where the bounded retry budgets guarantee
+        progress or a terminal ``failed``.  A genuine stall raises
+        immediately under ``strict`` (naming every pending request), and
+        under ``strict=False`` quarantines the blocked head
+        (``finish_reason="failed"``) and keeps draining everyone else.
+        Hitting the ceiling with work still pending always raises: a silent
+        return here used to hand back truncated outputs that looked
+        complete."""
         iters = 0
         while (self.queue or any(s is not None for s in self.slots)):
             if iters >= max_steps:
@@ -561,10 +932,13 @@ class ServingEngine:
                     f"run_until_drained hit max_steps={max_steps} with work "
                     f"left: {len(self.queue)} queued, "
                     f"{sum(s is not None for s in self.slots)} active "
-                    f"slot(s) — raise max_steps or shrink the workload")
+                    f"slot(s) — raise max_steps or shrink the workload; "
+                    f"pending:\n{self._pending_report()}")
             iters += 1
             if self.step() == 0 and self.queue:
                 self.stats.idle_steps += 1
+                if self._retry_pending:
+                    continue    # fault ate this step; budgets bound the spin
                 head = self.queue[0]
                 swapped = head.submit_seq in self._swapped
                 need = (len(self._swapped[head.submit_seq].private_lis)
@@ -572,7 +946,7 @@ class ServingEngine:
                         else self.sched.pages_needed(head, self.pager,
                                                      self.cache))
                 free_slots = sum(s is None for s in self.slots)
-                raise RuntimeError(
+                msg = (
                     f"admission stalled: queue head request uid={head.uid} "
                     f"(prompt {len(head.prompt)} tokens, "
                     f"{'swapped-out, ' if swapped else ''}"
@@ -581,7 +955,15 @@ class ServingEngine:
                     f"{self.pager.num_pages - 1} "
                     f"(+{self.pager.evictable_pages()} evictable), "
                     f"free_slots={free_slots}/"
-                    f"{self.B}, and no active slot can unblock it")
+                    f"{self.B}, and no active slot can unblock it; "
+                    f"pending:\n{self._pending_report()}")
+                if not self.strict:
+                    # degrade: the head alone is unservable — fail it, keep
+                    # the engine alive for everything behind it
+                    self.queue.popleft()
+                    self._finish_abnormal(head, "failed", msg)
+                    continue
+                raise RuntimeError(msg)
         return self.stats
 
 

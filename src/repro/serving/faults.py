@@ -1,0 +1,190 @@
+"""Deterministic fault injection for the serving stack.
+
+The engine's failure handling is only trustworthy if its abnormal paths run
+under test as routinely as its happy path.  This module provides a seedable
+:class:`FaultPlan` — a schedule of faults fired at **named injection sites**
+threaded through the pager, the swap path, the prefix cache, and the engine
+step — so a chaos run is *reproducible*: the same plan + seed + workload
+produces the same fault sequence, and a regression is a diffable event log,
+not a flake.
+
+Injection sites (see the component that probes each):
+
+==================  =========================================================
+``page_alloc``      ``PagePool.can_alloc`` reports an allocator outage
+                    (admission/growth sees "no pages" although pages exist)
+``page_grow``       ``PagePool.grow`` raises :class:`TransientFault` instead
+                    of allocating (engine retries with a bounded budget;
+                    a mid-plan fault is rolled back by the scheduler)
+``pool_pressure``   ``PagePool.can_alloc`` subtracts ``value`` phantom pages
+                    for ``duration`` engine steps (a forced pressure spike —
+                    exercises watermark blocking + preemption, no exception)
+``swap_drain``      ``_drain_swap_buffers`` leaves the device→host copy "in
+                    flight" this step (resume-before-drain path)
+``swap_corrupt``    a drained host swap image has bytes flipped *after* its
+                    checksum was recorded — detection happens at swap-in and
+                    the victim re-prefills instead of resuming poisoned KV
+``prefix_evict``    ``PrefixCache.match`` force-evicts the matched evictable
+                    pages and reports a miss (the match→attach race; the
+                    admission simply goes cold)
+``decode_launch``   the engine's decode launch raises
+                    :class:`SimulatedDeviceError` before dispatch (state
+                    untouched; the step retries, budget-bounded)
+``prefill_launch``  same for the chunk-prefill launch
+==================  =========================================================
+
+Every probe is a cheap no-op when no plan is installed (a single ``is None``
+check at each site), so production paths pay nothing.
+
+A :class:`FaultSpec` fires when **all** of its set conditions hold — typical
+specs set exactly one of ``step`` (engine step index), ``op`` (the site's
+N-th probe), ``every`` (periodic), or ``prob`` (seeded Bernoulli per probe) —
+and at most ``times`` times (``None`` = unlimited).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+SITES = (
+    "page_alloc", "page_grow", "pool_pressure", "swap_drain", "swap_corrupt",
+    "prefix_evict", "decode_launch", "prefill_launch",
+)
+
+
+class TransientFault(RuntimeError):
+    """An injected, *retryable* failure (e.g. a page allocation that would
+    have succeeded).  Handlers retry with a bounded budget; exceeding it
+    turns the affected request terminal (``finish_reason="failed"``)."""
+
+
+class SimulatedDeviceError(RuntimeError):
+    """An injected device-launch failure (decode / prefill dispatch).  Raised
+    *before* any state mutation, so a retry next step is always sound."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault.  Conditions AND-combine; unset ones are ignored.
+
+    ``times`` bounds total fires (``None`` = unlimited).  ``value`` is the
+    site payload (``pool_pressure``: phantom pages withheld); ``duration``
+    extends a step-anchored ``pool_pressure`` spike over several steps.
+    """
+    site: str
+    step: Optional[int] = None      # fire while engine step index matches
+    op: Optional[int] = None        # fire on the site's N-th probe (0-based)
+    every: Optional[int] = None     # fire on every N-th probe
+    prob: float = 0.0               # seeded Bernoulli per probe
+    times: Optional[int] = 1        # max fires (None = unlimited)
+    value: int = 0                  # site payload (pressure pages)
+    duration: int = 1               # pool_pressure: steps the spike lasts
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"known: {SITES}")
+        if (self.step is None and self.op is None and self.every is None
+                and not self.prob):
+            raise ValueError(f"spec for {self.site!r} sets no firing "
+                             "condition (step/op/every/prob)")
+        if self.every is not None and self.every < 1:
+            raise ValueError("every must be >= 1")
+
+
+class FaultPlan:
+    """A seeded, deterministic schedule of injected faults.
+
+    Components *probe* the plan (``fires(site)``); the engine advances the
+    step clock (``begin_step``).  All randomness comes from one
+    ``np.random.default_rng(seed)`` consumed in probe order, and the serving
+    engine is single-threaded and deterministic — so two runs of the same
+    workload under the same plan inject byte-identical fault sequences.
+
+    ``injected`` counts fires per site; ``log`` records
+    ``(step, site, probe_index)`` per fire for diffable chaos reports.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec], seed: int = 0):
+        self.specs = list(specs)
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._ops: Dict[str, int] = {s: 0 for s in SITES}
+        self._fires_left = [s.times for s in self.specs]
+        self._step = -1                  # before the first begin_step
+        self.injected: Dict[str, int] = {s: 0 for s in SITES}
+        self.log: List[tuple] = []
+        self.pressure_hits = 0           # probes that saw an active window
+
+    # ------------------------------------------------------------- clock ---
+    def begin_step(self, step_index: int) -> None:
+        """Engine hook: the current engine step index (all step-anchored
+        specs key off this)."""
+        self._step = step_index
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    # ------------------------------------------------------------- probes --
+    def fires(self, site: str) -> bool:
+        """Probe ``site``: advance its op counter and fire if any spec's
+        conditions all hold (first match wins; its budget is consumed)."""
+        opi = self._ops[site]
+        self._ops[site] = opi + 1
+        for i, spec in enumerate(self.specs):
+            if spec.site != site or spec.site == "pool_pressure":
+                continue
+            left = self._fires_left[i]
+            if left is not None and left <= 0:
+                continue
+            if spec.step is not None and spec.step != self._step:
+                continue
+            if spec.op is not None and spec.op != opi:
+                continue
+            if spec.every is not None and opi % spec.every != 0:
+                continue
+            if spec.prob and not (self._rng.random() < spec.prob):
+                continue
+            if left is not None:
+                self._fires_left[i] = left - 1
+            self.injected[site] += 1
+            self.log.append((self._step, site, opi))
+            return True
+        return False
+
+    def pressure_pages(self) -> int:
+        """Phantom pages withheld from ``can_alloc`` this step: the summed
+        ``value`` of every ``pool_pressure`` spec whose
+        ``[step, step + duration)`` window covers the current step.  A
+        *condition*, not an event — probing it never consumes budget or RNG
+        (so it can be polled every allocation at zero determinism cost)."""
+        total = 0
+        for spec in self.specs:
+            if spec.site != "pool_pressure" or spec.step is None:
+                continue
+            if spec.step <= self._step < spec.step + spec.duration:
+                total += spec.value
+        if total:
+            self.pressure_hits += 1
+        return total
+
+    def pressure_active(self) -> bool:
+        return self.pressure_pages() > 0
+
+
+def corrupt_host_image(rows):
+    """Return ``rows`` with one byte flipped in its first leaf — the
+    ``swap_corrupt`` payload.  Deterministic (always byte 0), so a chaos
+    run's corruption is reproducible; the engine's checksum must catch it
+    regardless of which byte turned.  Host leaves can be read-only zero-copy
+    views of device buffers, so the poisoned leaf is a writable copy and the
+    (cheap, host-only) tree is rebuilt around it."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(rows)
+    bad = np.array(leaves[0])            # writable host copy
+    bad.reshape(-1).view(np.uint8)[0] ^= 0xFF
+    return jax.tree.unflatten(treedef, [bad] + leaves[1:])

@@ -34,7 +34,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.faults import TransientFault
+
 TRASH_PAGE = 0
+
+
+class PagerInvariantError(RuntimeError):
+    """A pager tripwire fired (stale table, refcount drift, shared-page write
+    hazard).  ``slot`` names the offending slot when one is identifiable, so
+    a non-strict engine can quarantine that request and keep serving; it is
+    ``None`` for pool-global violations (refcount drift), which only a hard
+    stop can handle safely."""
+
+    def __init__(self, msg: str, slot: Optional[int] = None):
+        super().__init__(msg)
+        self.slot = slot
 
 
 class PagePool:
@@ -67,6 +81,7 @@ class PagePool:
         self._held: Dict[int, int] = {}             # page -> swap-hold count
         self._cached: set = set()                   # prefix-cache resident
         self._evictor = None                        # PrefixCache (or None)
+        self.faults = None                          # FaultPlan (or None)
 
     # ------------------------------------------------------------- queries --
     @property
@@ -81,8 +96,19 @@ class PagePool:
 
     def can_alloc(self, n: int) -> bool:
         """Whether ``n`` pages are obtainable (free now or via LRU eviction
-        of unreferenced cached pages)."""
-        return n <= len(self._free) + self.evictable_pages()
+        of unreferenced cached pages).
+
+        Fault sites: ``page_alloc`` reports a transient allocator outage
+        (pages exist but the probe says no — admission/growth backs off and
+        retries), ``pool_pressure`` withholds phantom pages for the spike's
+        duration.  Both degrade through the *existing* "not enough pages"
+        paths, so no caller needs fault-specific handling."""
+        avail = len(self._free) + self.evictable_pages()
+        if self.faults is not None:
+            if self.faults.fires("page_alloc"):
+                return False
+            avail -= self.faults.pressure_pages()
+        return n <= avail
 
     def slot_pages(self, slot: int) -> List[int]:
         return list(self._slot_pages[slot])
@@ -173,6 +199,12 @@ class PagePool:
             raise ValueError(
                 f"slot {slot} would own {owned + n} pages > "
                 f"max_pages_per_slot={self.max_pages_per_slot}")
+        if self.faults is not None and self.faults.fires("page_grow"):
+            # raised before any allocation, so the pool is untouched: the
+            # engine retries next step (bounded budget) and a mid-plan fault
+            # is rolled back by the scheduler's admission abort
+            raise TransientFault(
+                f"injected page_grow fault (slot {slot}, n={n})")
         pages = self._take_free(n)
         for p in pages:
             self._ref[p] = 1
@@ -407,8 +439,10 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     not registered read-only in the prefix cache (shared pages take a
     copy-on-write before any write reaches them).
 
-    Raises ``RuntimeError`` naming the slot/page instead of letting the
-    decode silently read or clobber shared state.
+    Raises :class:`PagerInvariantError` (a ``RuntimeError``) naming the
+    slot/page instead of letting the decode silently read or clobber shared
+    state; slot-attributable violations carry ``.slot`` so a non-strict
+    engine can quarantine the one offending request and keep serving.
     """
     table = np.asarray(table)
     write_pos = np.asarray(write_pos)
@@ -420,11 +454,11 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     stale = live & (table == TRASH_PAGE)
     if stale.any():
         s, lp = np.argwhere(stale)[0]
-        raise RuntimeError(
+        raise PagerInvariantError(
             f"stale page table: active slot {int(s)} (write position "
             f"{int(write_pos[s])}) references the freed/trash page at "
             f"logical page {int(lp)} — pages were reclaimed while "
-            "the slot was still decoding")
+            "the slot was still decoding", slot=int(s))
     if refs is None:
         return
     refs = np.asarray(refs)
@@ -436,7 +470,7 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     bad = bad[bad != TRASH_PAGE]
     if bad.size:
         p = int(bad[0])
-        raise RuntimeError(
+        raise PagerInvariantError(
             f"refcount out of sync: page {p} has ref={int(refs[p])} but "
             f"{int(occ[p])} table listings + {int(held[p])} swap holds")
     # the page under each active slot's write cursor must be private
@@ -449,13 +483,14 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     if not_private.any():
         s = int(np.argmax(not_private))
         p = int(wp_page[s])
-        raise RuntimeError(
+        raise PagerInvariantError(
             f"shared-page write hazard: active slot {s} would write position "
             f"{int(write_pos[s])} into page {p} (ref={int(refs[p])}, "
             f"held={int(held[p])}"
             + (f", cached={bool(np.asarray(cached)[p])}" if cached is not None
                else "")
-            + ") — shared/cached pages are read-only and need copy-on-write")
+            + ") — shared/cached pages are read-only and need copy-on-write",
+            slot=s)
 
 
 # canonical page gather lives next to the attention decode paths that

@@ -63,6 +63,7 @@ class PrefixCache:
         self._lru: Dict[int, int] = {}         # evictable page -> last-use tick
         self._clock = 0
         self.stats = PrefixCacheStats()
+        self.faults = None                     # FaultPlan (or None)
         pool.set_evictor(self)
 
     # ------------------------------------------------------------- hashing --
@@ -86,8 +87,8 @@ class PrefixCache:
         return out
 
     # ------------------------------------------------------ match / insert --
-    def match(self, tokens, hashes: Optional[List[bytes]] = None
-              ) -> Tuple[List[int], int]:
+    def match(self, tokens, hashes: Optional[List[bytes]] = None,
+              probe_faults: bool = True) -> Tuple[List[int], int]:
         """Longest cached whole-page prefix of ``tokens``.
 
         Returns ``(pages, matched_tokens)``.  Matched evictable pages are
@@ -96,6 +97,8 @@ class PrefixCache:
         precomputed ``hashes`` (:meth:`block_hashes` — pure in the tokens) to
         skip re-chain-hashing: a blocked queue head is re-matched every
         engine step, and only the index lookups can change between steps.
+        ``probe_faults=False`` marks a diagnostic-only match (the admission
+        stall report): it must never consume fault-plan budget or evict.
         """
         self.stats.lookups += 1
         pages: List[int] = []
@@ -105,6 +108,17 @@ class PrefixCache:
             if p is None:
                 break
             pages.append(p)
+        if pages and probe_faults and self.faults is not None \
+                and self.faults.fires("prefix_evict"):
+            # forced eviction under attach: the matched pages vanish between
+            # match and attach (the race the LRU touch below normally closes).
+            # Evict every matched page that is currently evictable and report
+            # a miss — the admission degrades to a cold prefill, which the
+            # identity tests prove is token-equivalent.
+            for p in pages:
+                if p in self._lru:
+                    self._evict_page(p)
+            pages = []
         self._clock += 1
         for p in pages:
             if p in self._lru:
@@ -159,13 +173,16 @@ class PrefixCache:
         index entry, return the page to the pool's free list)."""
         if not self._lru:
             return False
-        page = min(self._lru, key=self._lru.get)
+        self._evict_page(min(self._lru, key=self._lru.get))
+        return True
+
+    def _evict_page(self, page: int) -> None:
+        """Evict one specific *evictable* page (LRU pick or forced)."""
         del self._lru[page]
         h = self._by_page.pop(page)
         del self._index[h]
         self.pool.release_cached(page)
         self.stats.evicted_pages += 1
-        return True
 
     # --------------------------------------------------------------- misc ---
     def __len__(self) -> int:

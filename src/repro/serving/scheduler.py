@@ -55,6 +55,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional, Tuple
 
+from repro.serving.faults import TransientFault
 from repro.serving.kv_cache import PagePool
 
 
@@ -113,6 +114,11 @@ class Scheduler:
         self.max_prefill_tokens = max_prefill_tokens
         self.mode = mode
         self.reservation = reservation
+        # True when the last plan() aborted an admission on an injected
+        # transient fault (rolled back, request back at the queue head) —
+        # the engine reads this to count a retry and to distinguish a
+        # fault-induced idle step from a genuine admission stall
+        self.last_plan_aborted = False
 
     def bucket_len(self, prompt_len: int) -> int:
         b = self.page_size
@@ -127,12 +133,14 @@ class Scheduler:
         # engine grows the table page-by-page as decode proceeds
         return min(len(req.prompt) + 1, self.max_seq)
 
-    def _admission_cost(self, req, pool: PagePool, cache=None) -> _AdmissionCost:
+    def _admission_cost(self, req, pool: PagePool, cache=None,
+                        probe_faults: bool = True) -> _AdmissionCost:
         """The one admission page-arithmetic path (used by both :meth:`plan`
         and :meth:`pages_needed`): cold total, cache-matched prefix credit,
         the full-match COW page, and the matched-but-unreferenced pages the
         attach is about to pin (which must not double as evictable headroom
-        for the fresh allocation)."""
+        for the fresh allocation).  ``probe_faults=False`` marks the
+        diagnostic twin's call: it must not consume fault-plan budget."""
         total = pool.pages_needed(self._tokens_wanted(req))
         if cache is None:
             return _AdmissionCost(total, [], 0, False, total, 0)
@@ -141,7 +149,8 @@ class Scheduler:
         hs = getattr(req, "_block_hashes", None)
         if hs is None:
             hs = req._block_hashes = cache.block_hashes(req.prompt)
-        matched, mtok = cache.match(req.prompt, hashes=hs)
+        matched, mtok = cache.match(req.prompt, hashes=hs,
+                                    probe_faults=probe_faults)
         full_match = bool(matched) and mtok == len(req.prompt)
         fresh = total - len(matched) + (1 if full_match else 0)
         pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
@@ -152,7 +161,7 @@ class Scheduler:
         twin of :meth:`plan`, sharing its arithmetic via
         :meth:`_admission_cost` (fresh pages plus the matched-but-unreferenced
         pages the attach would pin)."""
-        cost = self._admission_cost(req, pool, cache)
+        cost = self._admission_cost(req, pool, cache, probe_faults=False)
         return cost.fresh + cost.pinned
 
     def plan(self, queue: Deque, free_slots: List[int], pool: PagePool,
@@ -171,6 +180,7 @@ class Scheduler:
         budget = self.max_prefill_tokens
         buckets: dict = {}
         spent = 0
+        self.last_plan_aborted = False
         while queue and slots:
             req = queue[0]
             t = len(req.prompt)
@@ -201,16 +211,29 @@ class Scheduler:
                 break                       # chunk the backlog across steps
             queue.popleft()
             slot = slots.popleft()
-            if matched:
-                pool.attach(slot, matched)
-            # hold_src: the engine performs the src→dst device copy later
-            # (per bucket, before its prefill); the hold pins src so no
-            # allocation in the rest of this plan can reclaim + overwrite it
-            # first — the engine drops the hold right after the copy
-            cow_pair = (pool.cow(slot, len(matched) - 1, hold_src=True)
-                        if full_match else None)
-            if fresh - (1 if full_match else 0):
-                pool.grow(slot, fresh - (1 if full_match else 0))
+            cow_pair = None
+            try:
+                if matched:
+                    pool.attach(slot, matched)
+                # hold_src: the engine performs the src→dst device copy later
+                # (per bucket, before its prefill); the hold pins src so no
+                # allocation in the rest of this plan can reclaim + overwrite
+                # it first — the engine drops the hold right after the copy
+                cow_pair = (pool.cow(slot, len(matched) - 1, hold_src=True)
+                            if full_match else None)
+                if fresh - (1 if full_match else 0):
+                    pool.grow(slot, fresh - (1 if full_match else 0))
+            except TransientFault:
+                # injected grow fault mid-admission: roll the whole admission
+                # back (release attached pages + the COW copy and its hold,
+                # requeue at the head — FCFS preserved) and stop planning;
+                # the head simply retries next step
+                if cow_pair is not None:
+                    pool.drop_hold(cow_pair[0])
+                pool.free_slot(slot)
+                queue.appendleft(req)
+                self.last_plan_aborted = True
+                break
             if self.reservation == "lazy":
                 reserve += 1                # growth headroom for the new slot
             shared = len(matched) - (1 if full_match else 0)

@@ -1,0 +1,403 @@
+"""Request lifecycle + deterministic fault injection: submit validation and
+backpressure, cancel/deadline semantics across every phase (queued,
+prefilling, decoding, swapped), FaultPlan determinism, bounded-retry recovery
+with greedy token-identity under every injection site, swap-corruption
+detection → re-prefill, and the non-strict engine's quarantine / degraded
+drain (fail one request, keep serving the rest)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serving import kv_cache as KV
+from repro.serving.engine import RejectedRequest, Request, ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec, TransientFault
+
+
+# ----------------------------------------------------------- plan (pure) ----
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("bogus", step=1)
+    with pytest.raises(ValueError, match="no firing"):
+        FaultSpec("page_alloc")
+    with pytest.raises(ValueError, match="every"):
+        FaultSpec("page_alloc", every=0)
+
+
+def test_fault_plan_deterministic_and_budgeted():
+    def mk():
+        return FaultPlan([FaultSpec("page_alloc", prob=0.5, times=3),
+                          FaultSpec("page_grow", every=2, times=None)],
+                         seed=7)
+
+    a, b = mk(), mk()
+    for step in range(4):
+        a.begin_step(step)
+        b.begin_step(step)
+        for _ in range(10):
+            assert a.fires("page_alloc") == b.fires("page_alloc")
+            assert a.fires("page_grow") == b.fires("page_grow")
+    # Bernoulli site consumed its budget exactly; the log is diffable
+    assert a.injected["page_alloc"] == 3
+    assert a.log == b.log and len(a.log) > 3
+    # unlimited periodic site fires on every 2nd probe (ops 0, 2, ..., 38)
+    assert a.injected["page_grow"] == 20
+
+
+def test_pool_pressure_is_windowed_condition():
+    plan = FaultPlan([FaultSpec("pool_pressure", step=2, value=3, duration=2)])
+    for step, want in ((1, 0), (2, 3), (3, 3), (4, 0)):
+        plan.begin_step(step)
+        assert plan.pressure_pages() == want
+    # a polled condition, not an event: no budget or RNG consumed
+    assert plan.total_injected == 0
+
+
+# ----------------------------------------------------------------- setup ----
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("codellama-7b", smoke=True)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, n=6, max_tokens=8, seed=5):
+    # a shared one-page stem makes the prefix cache hit once early finishers
+    # insert their pages — so prefix_evict faults have something to evict
+    rng = np.random.default_rng(seed)
+    lens = (3, 7, 10, 5)
+    stem = rng.integers(2, cfg.vocab_size, 4).astype(np.int32)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [stem,
+                         rng.integers(2, cfg.vocab_size,
+                                      lens[i % 4]).astype(np.int32)]),
+                    max_tokens=max_tokens)
+            for i in range(n)]
+
+
+def _drive(params, cfg, fault_plan=None, **kw):
+    """Tight-pool engine (preemption + chunking + prefix cache all active)
+    over the standard mixed workload; returns (engine, requests, stats)."""
+    defaults = dict(batch_size=3, max_seq=24, page_size=4, num_pages=1 + 7,
+                    backend="xla", max_prefill_tokens=8, prefix_cache=True)
+    defaults.update(kw)
+    eng = ServingEngine(params, cfg, fault_plan=fault_plan, **defaults)
+    reqs = _reqs(cfg)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained(max_steps=600)
+    return eng, reqs, stats
+
+
+@pytest.fixture(scope="module")
+def ref_outputs(setup):
+    cfg, params = setup
+    _, reqs, _ = _drive(params, cfg)
+    return [r.output for r in reqs]
+
+
+# -------------------------------------------------- submit / backpressure ---
+def test_submit_rejects_invalid_requests(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=16, backend="xla")
+    empty = Request(uid=1, prompt=np.asarray([], np.int32), max_tokens=4)
+    with pytest.raises(RejectedRequest, match="empty prompt"):
+        eng.submit(empty)
+    zero = Request(uid=2, prompt=np.arange(2, 6).astype(np.int32),
+                   max_tokens=0)
+    with pytest.raises(RejectedRequest, match="max_tokens"):
+        eng.submit(zero)
+    # structured terminal state even though submit raised
+    for r in (empty, zero):
+        assert r.finish_reason == "rejected" and r.error and r.done_t
+    assert eng.stats.rejected == 2
+    assert not eng.queue
+    # RejectedRequest is a ValueError: pre-existing callers keep working
+    assert issubclass(RejectedRequest, ValueError)
+
+
+def test_submit_backpressure_bounded_queue(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=16, backend="xla",
+                        max_queue=2)
+    reqs = _reqs(cfg, n=3, max_tokens=2)
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    # a full queue sheds load without raising — operational, not a bug
+    assert eng.submit(reqs[2]) is False
+    assert reqs[2].finish_reason == "rejected"
+    assert "queue full" in reqs[2].error
+    assert eng.stats.rejected == 1 and len(eng.queue) == 2
+    stats = eng.run_until_drained()
+    assert stats.completed == 2
+
+
+# ------------------------------------------------------ cancel / deadline ---
+def test_cancel_queued_and_active_and_unknown(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=32, backend="xla")
+    active, queued = _reqs(cfg, n=2, max_tokens=30)
+    eng.submit(active)
+    eng.submit(queued)
+    assert eng.cancel(queued.uid)              # still waiting in the queue
+    assert queued.finish_reason == "cancelled" and queued.done_t
+    eng.step()
+    eng.step()                                 # active is mid-decode now
+    n_out = len(active.output)
+    assert eng.cancel(active.uid)              # decoding in a slot
+    assert active.finish_reason == "cancelled"
+    assert len(active.output) == n_out         # generated tokens survive
+    assert not eng.cancel(999)                 # unknown uid
+    assert not eng.cancel(active.uid)          # already terminal
+    assert eng.stats.cancelled == 2
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+    eng.pager.check_invariants()
+
+
+def test_cancel_swapped_request(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=3, max_seq=24, page_size=4,
+                        num_pages=1 + 7, backend="xla")
+    reqs = _reqs(cfg)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(300):
+        eng.step()
+        if eng._swapped:
+            break
+    assert eng._swapped, "workload never preempted — test sizing broke"
+    seq = next(iter(eng._swapped))
+    victim = next(r for r in eng.queue if r.submit_seq == seq)
+    assert eng.cancel(victim.uid)
+    # the swap image is gone and its kept-page holds released immediately
+    assert victim.finish_reason == "cancelled"
+    assert seq not in eng._swapped
+    eng.pager.check_invariants()
+    eng.run_until_drained(max_steps=600)
+    assert all(r.finish_reason in ("completed", "length", "cancelled")
+               for r in reqs)
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+
+
+def test_deadline_expiry_queued_and_mid_decode(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=32, backend="xla")
+    t = [0.0]
+    eng._clock = lambda: t[0]
+    r1 = Request(uid=1, prompt=np.arange(2, 8).astype(np.int32),
+                 max_tokens=30, deadline_s=5.0)
+    r2 = Request(uid=2, prompt=np.arange(2, 8).astype(np.int32),
+                 max_tokens=4, ttft_deadline_s=3.0)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()                   # r1 occupies the only slot; r2 waits
+    t[0] = 4.0                   # r2 blows its TTFT budget while queued
+    eng.step()
+    assert r2.finish_reason == "deadline" and r2.first_token_t is None
+    assert r1.finish_reason is None
+    t[0] = 6.0                   # r1 blows its total budget mid-decode
+    eng.step()
+    assert r1.finish_reason == "deadline"
+    assert len(r1.output) > 0    # partial output survives expiry
+    assert eng.stats.expired == 2
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+    eng.pager.check_invariants()
+
+
+def test_deadline_expiry_mid_prefill(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=64, page_size=8,
+                        backend="xla", max_prefill_tokens=8)
+    t = [0.0]
+    eng._clock = lambda: t[0]
+    r = Request(uid=9, prompt=np.arange(2, 40).astype(np.int32),
+                max_tokens=4, deadline_s=1.0)
+    eng.submit(r)
+    eng.step()                   # one 8-token chunk lands
+    assert 0 < int(eng.pos[0]) < len(r.prompt)
+    t[0] = 2.0
+    eng.step()                   # expires while still prefilling
+    assert r.finish_reason == "deadline" and r.first_token_t is None
+    assert eng.stats.expired == 1
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+    eng.pager.check_invariants()
+
+
+# ------------------------------------------- fault recovery: token identity -
+@pytest.mark.parametrize("spec", [
+    FaultSpec("page_alloc", every=3, times=4),
+    FaultSpec("page_grow", op=1, times=2),
+    FaultSpec("prefix_evict", op=0, times=2),
+    FaultSpec("decode_launch", step=3, times=2),
+    FaultSpec("prefill_launch", op=1, times=1),
+    FaultSpec("swap_drain", op=0, times=2),
+    FaultSpec("pool_pressure", step=2, value=2, duration=2),
+], ids=lambda s: s.site)
+def test_injected_fault_greedy_identity(setup, ref_outputs, spec):
+    """Every injection site degrades through retries / requeues / cold
+    prefills — never through different tokens: the faulted run must complete
+    every request with outputs identical to the no-fault run."""
+    cfg, params = setup
+    plan = FaultPlan([spec], seed=1)
+    eng, reqs, stats = _drive(params, cfg, fault_plan=plan)
+    if spec.site == "pool_pressure":
+        # a condition, not an event: prove the window was actually seen
+        assert plan.pressure_hits > 0, "pressure window never polled"
+    else:
+        assert plan.total_injected > 0, f"{spec.site} never fired"
+    assert stats.completed == len(reqs)
+    assert stats.faults_injected == plan.total_injected
+    assert [r.output for r in reqs] == ref_outputs
+    assert all(r.finish_reason in ("completed", "length") for r in reqs)
+    eng.pager.check_invariants()
+
+
+def test_swap_corruption_detected_and_reprefilled(setup, ref_outputs):
+    """A corrupted host swap image must be *detected* (checksum mismatch at
+    swap-in) and the victim re-prefilled from tokens — greedy outputs stay
+    identical; resuming the poisoned rows would silently corrupt them."""
+    cfg, params = setup
+    plan = FaultPlan([FaultSpec("swap_corrupt", op=0, times=1)], seed=1)
+    eng, reqs, stats = _drive(params, cfg, fault_plan=plan)
+    assert plan.injected["swap_corrupt"] == 1
+    assert stats.retries >= 1
+    assert sum(r.reprefills for r in reqs) == 1
+    assert stats.completed == len(reqs)
+    assert [r.output for r in reqs] == ref_outputs
+    eng.pager.check_invariants()
+
+
+def test_chaos_run_deterministic(setup):
+    """Same plan + seed + workload → byte-identical fault log and outputs:
+    a chaos regression is a diffable event, not a flake."""
+    cfg, params = setup
+
+    def run():
+        plan = FaultPlan([FaultSpec("page_alloc", every=7, times=2),
+                          FaultSpec("page_grow", prob=0.2, times=2),
+                          FaultSpec("decode_launch", step=4, times=1)],
+                         seed=3)
+        _, reqs, _ = _drive(params, cfg, fault_plan=plan)
+        return plan.log, [r.output for r in reqs]
+
+    log_a, out_a = run()
+    log_b, out_b = run()
+    assert log_a == log_b and len(log_a) > 0
+    assert out_a == out_b
+
+
+def test_decode_growth_retry_exhaustion_fails_request(setup):
+    """A grow fault that never stops firing must drive the victim to a
+    terminal ``failed`` on its bounded budget — not livelock the drain."""
+    cfg, params = setup
+    # op 0 is the admission grow; fault every decode-growth attempt after
+    plan = FaultPlan([FaultSpec("page_grow", op=i, times=1)
+                      for i in range(1, 9)])
+    eng = ServingEngine(params, cfg, batch_size=1, max_seq=32, page_size=4,
+                        backend="xla", fault_plan=plan, retry_budget=2)
+    r = Request(uid=5, prompt=np.arange(2, 6).astype(np.int32), max_tokens=20)
+    eng.submit(r)
+    stats = eng.run_until_drained(max_steps=100)
+    assert r.finish_reason == "failed" and "budget" in r.error
+    assert stats.failed == 1
+    assert stats.retries == 3 and r.retries == 3   # budget + the final straw
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+    eng.pager.check_invariants()
+
+
+# ------------------------------------------------- quarantine vs strict -----
+def _forge_write_hazard(eng):
+    """Ghost-list the write-cursor page of slot 0 in idle slot 2, keeping
+    refcounts self-consistent — exactly the shared-page write hazard the
+    tripwires exist for.  Callers pick prompt lengths that leave slot 0's
+    position mid-page, so the cursor sits on an owned page."""
+    pg = int(eng.pager.table()[0, int(eng.pos[0]) // eng.PS])
+    assert pg != KV.TRASH_PAGE
+    eng.pager._table[2, 0] = pg
+    eng.pager._slot_pages[2].append(pg)
+    eng.pager._ref[pg] += 1
+
+
+def _hazard_pair():
+    # 6- and 9-token prompts: positions 7 and 10 after the prefill sample,
+    # both mid-page at page_size=4 (a page-aligned position would put the
+    # cursor on a not-yet-grown page instead of an owned one)
+    return (Request(uid=1, prompt=np.arange(2, 8).astype(np.int32),
+                    max_tokens=6),
+            Request(uid=2, prompt=np.arange(2, 11).astype(np.int32),
+                    max_tokens=6))
+
+
+def test_strict_invariant_violation_still_raises(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=3, max_seq=16, page_size=4,
+                        backend="xla")                       # strict default
+    for r in _hazard_pair():
+        eng.submit(r)
+    eng.step()
+    _forge_write_hazard(eng)
+    with pytest.raises(KV.PagerInvariantError, match="write hazard"):
+        eng.step()
+
+
+def test_nonstrict_quarantines_offending_slot_keeps_serving(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=3, max_seq=16, page_size=4,
+                        backend="xla", strict=False)
+    r1, r2 = _hazard_pair()
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()
+    _forge_write_hazard(eng)
+    eng.step()                    # tripwire fires → slot 0 quarantined
+    assert r1.finish_reason == "failed" and "hazard" in r1.error
+    assert eng.stats.failed == 1
+    eng.run_until_drained()       # ...and the engine keeps serving r2
+    assert r2.finish_reason in ("completed", "length")
+    eng.pager.free_slot(2)        # undo the forged ghost listing
+    eng.pager.check_invariants()
+    assert eng.pager.free_pages == eng.pager.num_pages - 1
+
+
+def test_nonstrict_stall_fails_head_keeps_serving(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=2, max_seq=16, page_size=4,
+                        num_pages=9, backend="xla", strict=False)
+    eng.pager._free = eng.pager._free[:1]      # simulate a page leak: 1 left
+    big = Request(uid=42, prompt=np.arange(2, 9).astype(np.int32),
+                  max_tokens=2)                # needs 2 pages: unadmittable
+    small = Request(uid=43, prompt=np.arange(2, 4).astype(np.int32),
+                    max_tokens=2)              # fits in the surviving page
+    eng.submit(big)
+    eng.submit(small)
+    stats = eng.run_until_drained()
+    assert big.finish_reason == "failed"
+    assert "admission stalled" in big.error and "uid=42" in big.error
+    assert small.finish_reason in ("completed", "length")
+    assert stats.failed == 1 and stats.completed == 1
+
+
+def test_stall_and_max_steps_errors_name_every_pending_request(setup):
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, batch_size=2, max_seq=16, page_size=4,
+                        num_pages=9, backend="xla")
+    eng.pager._free = eng.pager._free[:1]
+    eng.submit(Request(uid=42, prompt=np.arange(2, 9).astype(np.int32),
+                       max_tokens=2))
+    eng.submit(Request(uid=77, prompt=np.arange(2, 9).astype(np.int32),
+                       max_tokens=2))
+    with pytest.raises(RuntimeError) as ei:
+        eng.run_until_drained()
+    msg = str(ei.value)
+    for needle in ("uid=42", "uid=77", "phase=queued", "pager: free="):
+        assert needle in msg, f"stall report missing {needle!r}:\n{msg}"
+    # the max_steps ceiling carries the same full report
+    eng2 = ServingEngine(params, cfg, batch_size=2, max_seq=16, page_size=4,
+                         backend="xla")
+    eng2.submit(Request(uid=7, prompt=np.arange(2, 6).astype(np.int32),
+                        max_tokens=2))
+    with pytest.raises(RuntimeError) as ei2:
+        eng2.run_until_drained(max_steps=0)
+    msg2 = str(ei2.value)
+    assert "uid=7" in msg2 and "phase=queued" in msg2 and "pager:" in msg2

@@ -36,14 +36,20 @@ def test_pager_grow_appends_pages():
     pool.check_invariants()
 
 
-def test_pager_randomized_stress_interleaved_ops():
+@pytest.mark.parametrize("faulted", [False, True], ids=["clean", "faulted"])
+def test_pager_randomized_stress_interleaved_ops(faulted):
     """Random admit (with prefix-cache match/attach/COW) / decode-grow /
     finish (cache insert) / preempt-swap / swap-in / explicit COW / LRU evict
     sequences hold the pager + cache invariants after every single operation.
 
     Token sequences are drawn from a tiny alphabet with page-aligned shared
     stems, so block-hash matches, shared attachments, full-aligned-match COW,
-    and held-page swaps all actually occur."""
+    and held-page swaps all actually occur.  The faulted variant runs the
+    same walk under a seeded FaultPlan — allocator outages, grow faults (the
+    harness rolls back like the scheduler does), forced prefix evictions, and
+    a pool-pressure window — and the invariants must still hold after every
+    op."""
+    from repro.serving.faults import FaultPlan, FaultSpec, TransientFault
     from repro.serving.prefix_cache import PrefixCache
 
     rng = np.random.default_rng(0)
@@ -52,6 +58,16 @@ def test_pager_randomized_stress_interleaved_ops():
                        max_pages_per_slot=MAXP)
     cache = PrefixCache(pool, PS, mode="stress")
     sched = Scheduler(page_size=PS, max_seq=MAXP * PS)
+    plan = None
+    if faulted:
+        plan = FaultPlan([
+            FaultSpec("page_alloc", prob=0.10, times=None),
+            FaultSpec("page_grow", prob=0.15, times=None),
+            FaultSpec("prefix_evict", prob=0.20, times=None),
+            FaultSpec("pool_pressure", step=100, value=4, duration=80),
+        ], seed=1)
+        pool.faults = plan
+        cache.faults = plan
     stems = [list(rng.integers(0, 3, 8)) for _ in range(3)]   # shared prefixes
     live: dict[int, dict] = {}             # slot -> {tokens, written}
     swapped: list[dict] = []               # swap states
@@ -60,6 +76,7 @@ def test_pager_randomized_stress_interleaved_ops():
         toks = stems[int(rng.integers(0, 3))] + list(
             rng.integers(0, 3, int(rng.integers(0, 9))))
         t = len(toks)
+        evicts_before = plan.injected["prefix_evict"] if plan else 0
         matched, mtok = cache.match(toks)
         full = bool(matched) and mtok == t
         total = pool.pages_needed(t + 1)
@@ -69,10 +86,14 @@ def test_pager_randomized_stress_interleaved_ops():
         # admission takes from the pool (fresh allocations plus the
         # matched-but-unreferenced pages the attach pins) — pages_needed
         # and plan() share one arithmetic path, asserted against the
-        # harness's independent bookkeeping at every admission state
+        # harness's independent bookkeeping at every admission state.
+        # A fired prefix_evict fault voids the twin: the harness saw a
+        # forced miss, while referenced matched pages survive in the index
+        # for the (non-probing) diagnostic to find.
         req = Request(uid=slot, prompt=np.asarray(toks, np.int32),
                       max_tokens=1)
-        assert sched.pages_needed(req, pool, cache) == fresh + pinned
+        if plan is None or plan.injected["prefix_evict"] == evicts_before:
+            assert sched.pages_needed(req, pool, cache) == fresh + pinned
         if total > MAXP or not pool.can_alloc(fresh):
             return
         if matched:
@@ -84,12 +105,20 @@ def test_pager_randomized_stress_interleaved_ops():
             pool.check_invariants()
             pool.drop_hold(src)
         if fresh - (1 if full else 0):
-            pool.grow(slot, fresh - (1 if full else 0))
+            try:
+                pool.grow(slot, fresh - (1 if full else 0))
+            except TransientFault:
+                # mirror the scheduler's mid-plan rollback: release whatever
+                # this aborted admission attached/copied and walk away
+                pool.free_slot(slot)
+                return
         cache.insert(toks, pool.slot_pages(slot), t // PS)
         live[slot] = {"tokens": list(toks), "written": t}
 
     ops_hit = set()
-    for _ in range(500):
+    for i in range(500):
+        if plan is not None:
+            plan.begin_step(i)
         op = rng.choice(["admit", "decode", "finish", "preempt", "swap_in",
                          "cow", "evict"])
         slot = int(rng.integers(0, B))
@@ -101,7 +130,10 @@ def test_pager_randomized_stress_interleaved_ops():
             if st["written"] + 1 > cap:
                 if cap // PS >= MAXP or not pool.can_alloc(1):
                     continue
-                pool.grow(slot, 1)
+                try:
+                    pool.grow(slot, 1)
+                except TransientFault:
+                    continue               # engine behavior: retry next step
             st["tokens"].append(int(rng.integers(0, 3)))
             st["written"] += 1
         elif op == "finish" and slot in live:
@@ -146,6 +178,11 @@ def test_pager_randomized_stress_interleaved_ops():
     assert ops_hit == {"admit", "decode", "finish", "preempt", "swap_in",
                        "cow", "evict"}
     assert cache.stats.hits > 0 and cache.stats.evicted_pages > 0
+    if plan is not None:
+        # the chaos actually happened — and every fire is in the diff log
+        for site in ("page_alloc", "page_grow", "prefix_evict"):
+            assert plan.injected[site] > 0, f"{site} never fired"
+        assert len(plan.log) == plan.total_injected
     # conservation: every page is free, referenced, or evictable-cached
     referenced = {p for s in range(B) for p in pool.slot_pages(s)}
     referenced |= {p for st in swapped for _, p in st["kept"]}
