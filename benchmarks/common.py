@@ -11,6 +11,7 @@ at smoke scale.
 from __future__ import annotations
 
 import time
+from pathlib import Path
 from typing import Dict, Tuple
 
 import jax
@@ -23,6 +24,40 @@ from repro.core import calibration as C
 from repro.models import api
 
 GROUP = 16  # smoke-scale quant group (prod: 128)
+
+# PTQ artifacts shared across suites (and across `benchmarks.run` processes —
+# CI runs one process per suite in the same workspace): keyed by the config
+# fingerprint, so every (model config, QuantConfig) pair quantizes exactly
+# once per workspace and every later suite boots warm from the artifact.
+BENCH_PTQ_CACHE = Path(".bench_ptq_cache")
+
+
+def cached_ptq(cfg, params, calib, qcfg, *, step: float = 0.5,
+               cache_root=None):
+    """Build-once / serve-many PTQ for benchmarks.
+
+    Quantizes through the artifact cache: a cache miss runs the full
+    SmoothQuant+ recipe and saves the artifact (``cold_boot_s``); the
+    returned tree is then *always* deserialized from disk (``warm_boot_s``),
+    so every caller exercises the save→load round trip and the two numbers
+    are directly comparable.  Returns ``(qparams, report, boot)`` where
+    ``boot`` is a JSON-ready dict (``cold_boot_s`` is None on a cache hit).
+    """
+    from repro.core import apply as AP
+
+    art = Path(cache_root or BENCH_PTQ_CACHE) / AP.ptq_fingerprint(cfg, qcfg)
+    cold_s = None
+    if not AP.ptq_matches(art, cfg, qcfg):
+        t0 = time.perf_counter()
+        qp, rep = AP.smoothquant_plus(params, cfg, calib, qcfg, step=step)
+        AP.save_ptq(art, qp, rep, cfg, qcfg)
+        cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    qp, rep = AP.load_ptq(art, cfg, qcfg)
+    warm_s = time.perf_counter() - t0
+    boot = {"ptq_artifact": str(art),
+            "cold_boot_s": cold_s, "warm_boot_s": warm_s}
+    return qp, rep, boot
 
 
 def outlier_model(arch: str, seed: int = 0, hot_scale: float = 100.0):

@@ -79,10 +79,23 @@ class ModelConfig:
     # XLA reference and oracle) | "pallas" (fused page-table-DMA kernel,
     # real-TPU) | "pallas_interpret" (same kernel interpreted on CPU, tests)
     paged_attn_impl: str = "auto"
+    # activation quantization: "a16" (bf16/f32 activations everywhere — the
+    # default, token-identical to the pre-W4A8 engine) | "a8_prefill"
+    # (prefill-chunk GEMMs quantize activations per-token to int8 and run the
+    # int8×int4→int32 kernel body on A8-eligible layers; decode GEMMs stay
+    # A16 via the token-count gate in kernels.ops)
+    act_quant: str = "a16"
 
     @property
     def hdim(self) -> int:
         return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def act_kernel(self) -> str:
+        """The per-call ``act=`` value model code hands to ``kernels.ops`` —
+        the ops-level gate (per-tensor eligibility flag + token count)
+        decides whether the A8 body actually runs."""
+        return "a8" if self.act_quant == "a8_prefill" else "a16"
 
     @property
     def jdtype(self):
@@ -121,6 +134,13 @@ class QuantConfig:
     skip_router: bool = True
     alpha: Optional[float] = None      # None → use searched value
     backend: str = "auto"              # kernels.ops backend
+    # W4A8 eligibility: layers whose worst per-token int8 activation
+    # round-trip error (post-smoothing, on the calibration set) exceeds this
+    # fall back to A16 in the prefill path.  Gaussian-ish rows score
+    # ~1/(127·√12) ≈ 0.7–0.9%; rows still dominated by surviving outlier
+    # channels score 2%+.  Part of the PTQ artifact fingerprint, so changing
+    # it invalidates saved artifacts.
+    a8_threshold: float = 0.015
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,7 +24,7 @@ from repro.configs.base import ModelConfig, QuantConfig
 from repro.core import calibration as C
 from repro.core import search as S
 from repro.core import smoothing as SM
-from repro.core.quantize import quantize
+from repro.core.quantize import QuantizedTensor, quantize
 
 
 @dataclasses.dataclass
@@ -35,6 +35,10 @@ class PTQReport:
     quantized_paths: List[Tuple[Any, ...]]
     fp_bytes: int
     quant_bytes: int
+    # W4A8 prefill: per-weight-path ("/"-joined) eligibility flag and the
+    # post-smoothing per-token int8 round-trip error that decided it
+    a8_eligibility: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    a8_errors: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def quantizable_paths(cfg: ModelConfig) -> List[Tuple[Any, ...]]:
@@ -78,14 +82,65 @@ def _mla_absorbed_quantize(w: jax.Array, cfg: ModelConfig, qcfg: QuantConfig):
     }
 
 
+def derive_a8_eligibility(
+    col: C.StatsCollector, cfg: ModelConfig, qcfg: QuantConfig
+) -> Tuple[Dict[Tuple[Any, ...], bool], Dict[str, float]]:
+    """Per-weight-path W4A8 eligibility from *post-smoothing* activation stats.
+
+    Eligibility is a property of a layer's input activations, and every
+    weight in a smoothing group shares one input — so the decision is made
+    per group, keyed by the group's collector stat key.  The worst per-token
+    int8 round-trip error seen for that key — max over calibration batches
+    AND stacked-layer depth (the flag is static per stacked tensor, so one
+    bad layer vetoes its whole stack) — must stay within
+    ``qcfg.a8_threshold``.  Groups with no recorded stats (path absent from
+    this layout) are conservatively ineligible.
+
+    Returns ``(path → bool, "/"-joined path → worst error)``.
+    """
+    amap: Dict[Tuple[Any, ...], bool] = {}
+    errors: Dict[str, float] = {}
+    for g in SM.smoothing_groups(cfg):
+        errs = [v for (blk, _lidx, sub), v in col.a8_err.items()
+                if blk == g.stats_block and sub == g.stats_sub]
+        worst = max(errs) if errs else float("inf")
+        ok = bool(worst <= qcfg.a8_threshold)
+        for wp in g.weights:
+            amap[wp] = ok
+            errors["/".join(map(str, wp))] = worst
+    return amap, errors
+
+
+def _tree_a8_flags(qparams, paths) -> Dict[str, bool]:
+    """Snapshot the static ``a8`` flags actually stamped on the tree — the
+    source of truth for reports and the artifact (an MLA absorbed pair moves
+    in step, so it reports as a single flag)."""
+    out: Dict[str, bool] = {}
+    for p in paths:
+        node = SM.tget(qparams, p)
+        if isinstance(node, QuantizedTensor):
+            out["/".join(map(str, p))] = bool(node.a8)
+        elif isinstance(node, dict):
+            out["/".join(map(str, p))] = bool(
+                all(v.a8 for v in node.values()))
+    return out
+
+
 def quantize_params(
-    params, cfg: ModelConfig, qcfg: QuantConfig
+    params, cfg: ModelConfig, qcfg: QuantConfig, *,
+    a8_map: Optional[Dict[Tuple[Any, ...], bool]] = None,
 ) -> Tuple[Any, List[Tuple[Any, ...]], int, int]:
     """Replace every quantizable linear weight with a QuantizedTensor.
 
     MLA layers additionally grow ``mixer/wkv_b_absorbed`` — stacked int4
     absorbed-form decode projections (see :func:`_mla_absorbed_quantize`), so
-    no serving path ever needs to dequantize ``wkv_b`` wholesale."""
+    no serving path ever needs to dequantize ``wkv_b`` wholesale.
+
+    ``a8_map`` (from :func:`derive_a8_eligibility`) stamps the static ``a8``
+    flag on each QuantizedTensor; paths missing from the map — including the
+    absorbed MLA tensors, whose latent-domain inputs are never calibrated —
+    are marked ineligible.  ``a8_map=None`` (RTN baseline, direct calls)
+    leaves the permissive default ``a8=True``."""
     fp_bytes = quant_bytes = 0
     done = []
     for wp in quantizable_paths(cfg):
@@ -94,6 +149,8 @@ def quantize_params(
         except (KeyError, TypeError):
             continue  # block absent in this layout (e.g. no hybrid tail)
         qt = quantize(w, group_size=qcfg.group_size, dtype=cfg.jdtype)
+        if a8_map is not None:
+            qt = dataclasses.replace(qt, a8=bool(a8_map.get(wp, False)))
         params = SM.tset(params, wp, qt)
         fp_bytes += w.size * 2
         quant_bytes += qt.nbytes_quant()
@@ -101,6 +158,9 @@ def quantize_params(
         if cfg.mla is not None and wp[-2:] == ("wkv_b", "w"):
             ab = _mla_absorbed_quantize(w, cfg, qcfg)
             ap = wp[:-2] + ("wkv_b_absorbed",)
+            if a8_map is not None:
+                ab = {k: dataclasses.replace(v, a8=bool(a8_map.get(ap, False)))
+                      for k, v in ab.items()}
             params = SM.tset(params, ap, ab, create=True)
             quant_bytes += ab["wk_t"].nbytes_quant() + ab["wv"].nbytes_quant()
             done.append(ap)
@@ -122,8 +182,16 @@ def smoothquant_plus(
     2. grid-search a single global α (step 0.05) minimizing whole-model loss;
     3. smooth (W ← diag(s)W, provider ← provider/s) — mathematically exact;
     4. group-wise 4-bit RTN quantization of the smoothed linear weights.
+
+    Beyond-paper W4A8 addendum: a second calibration pass over the *smoothed*
+    model measures what per-token int8 activation quantization would cost
+    each layer post-smoothing, and layers over ``qcfg.a8_threshold`` are
+    flagged A16-only (see :func:`derive_a8_eligibility`).  The flags ride the
+    QuantizedTensors into the artifact, so a served ``act_quant="a8_prefill"``
+    engine needs no calibration data of its own.
     """
-    col = C.collect_stats(params, cfg, calibration_batches)
+    batches = list(calibration_batches)  # consumed twice (pre + post smooth)
+    col = C.collect_stats(params, cfg, batches)
     if qcfg.alpha is not None:
         res = S.SearchResult(alpha=qcfg.alpha,
                              loss=S.model_quant_loss(params, cfg, col, qcfg.alpha,
@@ -135,10 +203,15 @@ def smoothquant_plus(
     smoothed, _ = SM.smooth_model(params, cfg, col, res.alpha)
     if not qcfg.enabled:
         return smoothed, PTQReport(res.alpha, res.loss, res.losses, [], 0, 0)
-    qparams, paths, fpb, qb = quantize_params(smoothed, cfg, qcfg)
+    col2 = C.collect_stats(smoothed, cfg, batches)
+    a8_map, a8_errors = derive_a8_eligibility(col2, cfg, qcfg)
+    qparams, paths, fpb, qb = quantize_params(smoothed, cfg, qcfg,
+                                              a8_map=a8_map)
     return qparams, PTQReport(
         alpha=res.alpha, search_loss=res.loss, loss_curve=res.losses,
         quantized_paths=paths, fp_bytes=fpb, quant_bytes=qb,
+        a8_eligibility=_tree_a8_flags(qparams, paths),
+        a8_errors=a8_errors,
     )
 
 
@@ -155,8 +228,15 @@ class StalePTQArtifactError(ValueError):
 def ptq_fingerprint(cfg: ModelConfig, qcfg: QuantConfig) -> str:
     """Config hash stored in / checked against the artifact: any change to
     the model or quantization config invalidates saved artifacts, so a stale
-    artifact can never be silently served."""
-    return hashlib.sha256(repr((cfg, qcfg)).encode()).hexdigest()[:16]
+    artifact can never be silently served.
+
+    ``act_quant`` is normalized out: it is a serving-time routing choice —
+    the artifact (weights + eligibility flags) is identical either way, so
+    one artifact serves both A16 and A8-prefill engines.  ``a8_threshold``
+    (a QuantConfig field) *does* participate: it changes the baked-in flags.
+    """
+    return hashlib.sha256(
+        repr((cfg.with_(act_quant="a16"), qcfg)).encode()).hexdigest()[:16]
 
 
 def has_ptq(directory) -> bool:
@@ -184,6 +264,10 @@ def save_ptq(directory, qparams, report: PTQReport, cfg: ModelConfig,
     """Persist the quantized pytree + report as a self-describing artifact."""
     from repro.checkpoint import manager as CK
 
+    # A8 flags are static tree *metadata* (not npz payload), so they're
+    # snapshotted here from the tree itself — the source of truth — and
+    # re-applied by load_ptq (the manager rebuilds with the default a8=True).
+    a8_flags = _tree_a8_flags(qparams, report.quantized_paths)
     meta = {
         "config_hash": ptq_fingerprint(cfg, qcfg),
         "model": cfg.name,
@@ -196,6 +280,8 @@ def save_ptq(directory, qparams, report: PTQReport, cfg: ModelConfig,
                                 for p in report.quantized_paths],
             "fp_bytes": int(report.fp_bytes),
             "quant_bytes": int(report.quant_bytes),
+            "a8_eligibility": a8_flags,
+            "a8_errors": {k: float(v) for k, v in report.a8_errors.items()},
         },
     }
     return CK.save_ptq_artifact(directory, qparams, meta)
@@ -222,5 +308,20 @@ def load_ptq(directory, cfg: ModelConfig,
         loss_curve={float(k): v for k, v in r["loss_curve"].items()},
         quantized_paths=[tuple(p) for p in r["quantized_paths"]],
         fp_bytes=r["fp_bytes"], quant_bytes=r["quant_bytes"],
+        a8_eligibility={k: bool(v)
+                        for k, v in r.get("a8_eligibility", {}).items()},
+        a8_errors={k: float(v) for k, v in r.get("a8_errors", {}).items()},
     )
+    # re-stamp the static a8 flags (the npz holds only array payloads; the
+    # manager rebuilds QuantizedTensors with the permissive default a8=True)
+    for p in report.quantized_paths:
+        flag = report.a8_eligibility.get("/".join(map(str, p)))
+        if flag is None:
+            continue
+        node = SM.tget(tree, p)
+        if isinstance(node, QuantizedTensor):
+            tree = SM.tset(tree, p, dataclasses.replace(node, a8=flag))
+        elif isinstance(node, dict):
+            tree = SM.tset(tree, p, {
+                k: dataclasses.replace(v, a8=flag) for k, v in node.items()})
     return tree, report

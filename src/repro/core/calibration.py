@@ -43,6 +43,11 @@ class StatsCollector:
     # mean |x| accumulators (AWQ uses the mean as importance — §4)
     sums: Dict[StatKey, np.ndarray] = dataclasses.field(default_factory=dict)
     counts: Dict[StatKey, int] = dataclasses.field(default_factory=dict)
+    # W4A8 eligibility stat: worst per-token relative RMS error of the int8
+    # activation round trip (max over batches).  Meaningful on a
+    # *post-smoothing* pass — `smoothquant_plus` runs a second collect over
+    # the smoothed model and `apply.derive_a8_eligibility` thresholds this.
+    a8_err: Dict[StatKey, float] = dataclasses.field(default_factory=dict)
     moe_key: Optional[Tuple[Tuple[str, ...], Tuple[int, ...]]] = None
 
     def register_tree(self, block: Tuple[str, ...], lidx: Tuple[int, ...], tree):
@@ -57,6 +62,8 @@ class StatsCollector:
         key = self.ids.get(id(w))
         if key is None:
             return
+        from repro.core.quantize import a8_roundtrip_error
+
         ax = tuple(range(x.ndim - 1))
         absx = jnp.abs(x.astype(jnp.float32))
         amax = np.asarray(jnp.max(absx, axis=ax))
@@ -66,11 +73,14 @@ class StatsCollector:
         n = int(np.prod(x.shape[:-1]))
         self.sums[key] = self.sums.get(key, 0.0) + asum
         self.counts[key] = self.counts.get(key, 0) + n
+        err = float(a8_roundtrip_error(x))
+        self.a8_err[key] = max(self.a8_err.get(key, 0.0), err)
 
     def mean_stats(self, key: StatKey) -> np.ndarray:
         return self.sums[key] / max(self.counts.get(key, 1), 1)
 
-    def record_explicit(self, subpath: Tuple[str, ...], amax: jax.Array):
+    def record_explicit(self, subpath: Tuple[str, ...], amax: jax.Array,
+                        a8_err: Optional[jax.Array] = None):
         if self.moe_key is None:
             return
         block, lidx = self.moe_key
@@ -78,6 +88,8 @@ class StatsCollector:
         amax = np.asarray(amax, np.float32)
         prev = self.stats.get(key)
         self.stats[key] = amax if prev is None else np.maximum(prev, amax)
+        if a8_err is not None:
+            self.a8_err[key] = max(self.a8_err.get(key, 0.0), float(a8_err))
 
 
 def current_collector() -> Optional[StatsCollector]:

@@ -18,6 +18,7 @@ each group contiguous in VMEM next to its ``scales``/``zeros`` row.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -28,7 +29,11 @@ QMAX = (1 << NBITS) - 1  # 15
 DEFAULT_GROUP_SIZE = 128
 
 
-@jax.tree_util.register_dataclass
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("packed", "scales", "zeros"),
+    meta_fields=("a8",),
+)
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
     """A group-wise int4-quantized weight, packed 2 codes / uint8.
@@ -45,11 +50,18 @@ class QuantizedTensor:
       zeros:  dtype[*lead, Ci//G, Co] — per-group, per-out-channel zero point
               (stored in the *float* domain as ``zero_code`` so dequant is
               ``(q - zeros) * scales``).
+      a8:     static (non-traced) A8 eligibility flag: calibration found this
+              layer's post-smoothing inputs safe for per-token int8
+              activations.  ``ops.w4a16_matmul``/``w4a16_grouped_matmul``
+              only take the int8×int4 path when it is True; being tree
+              *metadata*, a flip retraces rather than recompiles-per-step,
+              and ``lax.scan`` over stacked leaves carries it unchanged.
     """
 
     packed: jax.Array
     scales: jax.Array
     zeros: jax.Array
+    a8: bool = True
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -75,7 +87,7 @@ class QuantizedTensor:
                              "only; this tensor is 2-D")
         return QuantizedTensor(
             packed=self.packed[idx], scales=self.scales[idx],
-            zeros=self.zeros[idx])
+            zeros=self.zeros[idx], a8=self.a8)
 
     def nbytes_quant(self) -> int:
         return (
@@ -199,6 +211,50 @@ def fake_quantize(
     zeros = jnp.round(-wmin / scales)
     q = jnp.clip(jnp.round(wf / scales) + zeros, 0, QMAX)
     return ((q - zeros) * scales).reshape(*lead, ci, co).astype(w.dtype)
+
+
+# --------------------------------------------------- A8 activations -------
+# The W4A8 prefill path (FPTQ / arxiv 2311.05161 on top of SmoothQuant+'s
+# smoothing): activations quantize per *token row* to symmetric int8 right
+# before the GEMM, the kernel contracts int8×int4→int32 on the MXU, and the
+# per-(token, group) rescale restores the float domain.  These helpers define
+# the quantization semantics once — the Pallas kernels, the XLA oracles, and
+# the calibration-time eligibility metric all share them.
+
+ACT_QMAX = 127  # symmetric int8
+
+
+def quantize_acts_per_token(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-token symmetric int8 activation quantization.
+
+    ``x[..., Ci]`` → ``(codes int8[..., Ci], scales f32[..., 1])`` with
+    ``x ≈ codes * scales``.  Symmetric per-row scaling never clips the row
+    max; the error is pure rounding, which is what the calibration-time
+    eligibility metric measures.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scales = jnp.maximum(amax, 1e-8) / ACT_QMAX
+    codes = jnp.clip(jnp.round(xf / scales), -ACT_QMAX, ACT_QMAX).astype(
+        jnp.int8
+    )
+    return codes, scales
+
+
+def a8_roundtrip_error(x: jax.Array) -> jax.Array:
+    """Worst per-token relative RMS error of the int8 activation round trip.
+
+    The per-layer A8-eligibility statistic: rows whose magnitude is dominated
+    by a few surviving outlier channels lose most of their levels and score
+    high; post-smoothing rows score ~``1/(127·√12)``.  Returns a scalar —
+    ``max`` over token rows, so one bad row disqualifies the layer.
+    """
+    xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    codes, scales = quantize_acts_per_token(xf)
+    err = codes.astype(jnp.float32) * scales - xf
+    num = jnp.sqrt(jnp.mean(err * err, axis=-1))
+    den = jnp.sqrt(jnp.mean(xf * xf, axis=-1))
+    return jnp.max(num / jnp.maximum(den, 1e-8))
 
 
 def quantization_loss(

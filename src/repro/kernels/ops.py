@@ -24,24 +24,57 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+# W4A8 token-count dispatch threshold: below this many rows the GEMM is
+# memory-bound (decode batches, tail chunks) and W4A16 already wins — the
+# int8 path only pays off when the MXU is the bottleneck.  Row counts are
+# static at trace time (bucketed prefill chunks, fixed decode batch), so the
+# choice of kernel body is a trace-time decision, not a runtime branch.
+A8_MIN_TOKENS = 16
+
+
+def _resolve_act(act: str, qt: QuantizedTensor, rows: int) -> str:
+    """Gate the A8 request: the caller asks (``act="a8"``), the calibration
+    verdict rides on the tensor (``qt.a8`` — per-layer fallback), and the
+    static row count keeps small-T decode on the A16 body."""
+    if act not in ("a16", "a8"):
+        raise ValueError(f"act must be 'a16' or 'a8', got {act!r}")
+    if act == "a8" and qt.a8 and rows >= A8_MIN_TOKENS:
+        return "a8"
+    return "a16"
+
+
 def w4a16_matmul(
     x: jax.Array,
     qt: QuantizedTensor,
     *,
     backend: str = "auto",
+    act: str = "a16",
     block_t: int = _w4.DEFAULT_BLOCK_T,
     block_co: int = _w4.DEFAULT_BLOCK_CO,
 ) -> jax.Array:
-    """Quantized linear contraction ``x @ dequant(qt)``."""
+    """Quantized linear contraction ``x @ dequant(qt)``.
+
+    ``act="a8"`` requests the W4A8 prefill body (per-token int8 activations,
+    int8×int4→int32 MXU contraction); it is honored only when the tensor's
+    calibration-derived ``a8`` flag is set and the flattened token count
+    reaches :data:`A8_MIN_TOKENS` — otherwise the call falls back to the
+    untouched A16 path."""
     if backend == "auto":
         backend = default_backend()
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    act = _resolve_act(act, qt, rows)
     if backend == "pallas":
-        return _w4.w4a16_matmul(x, qt, block_t=block_t, block_co=block_co)
+        return _w4.w4a16_matmul(
+            x, qt, block_t=block_t, block_co=block_co, act=act)
     if backend == "interpret":
         return _w4.w4a16_matmul(
-            x, qt, block_t=block_t, block_co=block_co, interpret=True
+            x, qt, block_t=block_t, block_co=block_co, interpret=True, act=act
         )
     if backend == "xla":
+        if act == "a8":
+            return _ref.w4a8_matmul_ref(x, qt)
         return _ref.w4a16_matmul_ref(x, qt)
     raise ValueError(f"unknown backend {backend!r}")
 
@@ -51,6 +84,7 @@ def w4a16_grouped_matmul(
     qt: QuantizedTensor,
     *,
     backend: str = "auto",
+    act: str = "a16",
     block_c: int = _w4g.DEFAULT_BLOCK_C,
     block_co: int = _w4g.DEFAULT_BLOCK_CO,
 ) -> jax.Array:
@@ -59,16 +93,23 @@ def w4a16_grouped_matmul(
     The serving entry for stacked ``[E, Ci, Co]`` weights (MoE experts, MLA
     absorbed-form heads): packed int4 + scales are the only resident weight
     format on every backend — the XLA path dequantizes inside the fused
-    contraction, never as a persisted dense copy."""
+    contraction, never as a persisted dense copy.  ``act="a8"`` follows the
+    same gating as :func:`w4a16_matmul` with the per-expert row count ``C``
+    as the token count (MLA absorbed decode runs C = batch rows and stays
+    A16)."""
     if backend == "auto":
         backend = default_backend()
+    act = _resolve_act(act, qt, x.shape[1])
     if backend == "pallas":
         return _w4g.w4a16_grouped_matmul(
-            x, qt, block_c=block_c, block_co=block_co)
+            x, qt, block_c=block_c, block_co=block_co, act=act)
     if backend == "interpret":
         return _w4g.w4a16_grouped_matmul(
-            x, qt, block_c=block_c, block_co=block_co, interpret=True)
+            x, qt, block_c=block_c, block_co=block_co, interpret=True,
+            act=act)
     if backend == "xla":
+        if act == "a8":
+            return _ref.w4a8_grouped_ref(x, qt)
         return _ref.w4a16_grouped_ref(x, qt)
     raise ValueError(f"unknown backend {backend!r}")
 

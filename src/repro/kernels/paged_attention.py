@@ -53,10 +53,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
-# jax renamed TPUCompilerParams -> CompilerParams across releases
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams"
-)
+from repro.kernels import tpu_compiler_params
 
 
 def _live_pages(length, page_size):
@@ -181,7 +178,7 @@ def gqa_paged_attention(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, grp, dv), jnp.float32),
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -307,7 +304,7 @@ def mla_paged_attention(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -476,7 +473,7 @@ def gqa_paged_prefill(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, hkv, grp, dv), jnp.float32),
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -640,7 +637,7 @@ def mla_paged_prefill(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, h, r), jnp.float32),
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -26,8 +26,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantize import QuantizedTensor
-from repro.kernels.w4a16_matmul import _CompilerParams, _dequant_block, _round_up
+from repro.core.quantize import QuantizedTensor, quantize_acts_per_token
+from repro.kernels import tpu_compiler_params
+from repro.kernels.w4a16_matmul import (
+    _dequant_block,
+    _dequant_block_i8,
+    _fit_block_co,
+    _round_up,
+)
 
 DEFAULT_BLOCK_C = 256
 DEFAULT_BLOCK_CO = 256
@@ -55,8 +61,37 @@ def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_a8(
+    x_ref, xs_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k
+):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # this expert's block: x (bc, bci) int8; xs (bc, 1) f32
+    wq = _dequant_block_i8(packed_ref[0], zeros_ref[0])
+    part = jax.lax.dot_general(
+        x_ref[0],
+        wq,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # per-(row, group) rescale at each group boundary (see w4a16_matmul)
+    acc_ref[...] += (
+        part.astype(jnp.float32)
+        * scales_ref[0].astype(jnp.float32)
+        * xs_ref[0]
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_c", "block_co", "interpret")
+    jax.jit, static_argnames=("block_c", "block_co", "interpret", "act")
 )
 def w4a16_grouped_matmul(
     x: jax.Array,
@@ -65,12 +100,16 @@ def w4a16_grouped_matmul(
     block_c: int = DEFAULT_BLOCK_C,
     block_co: int = DEFAULT_BLOCK_CO,
     interpret: bool = False,
+    act: str = "a16",
 ) -> jax.Array:
     """``x[E, C, D] @ dequant(qt)[E, D, F] -> [E, C, F]`` via Pallas.
 
     One grid cell touches one expert only, so sharding the expert axis (EP)
     shards the grid.  The contraction block is pinned to the quantization
-    group size (whole groups per step, one scales/zeros row).
+    group size (whole groups per step, one scales/zeros row).  ``act="a8"``
+    quantizes each ``(expert, row)`` to symmetric int8 outside the kernel and
+    runs the int8×int4→int32 body; zero-padded capacity rows quantize to
+    all-zero codes and still contribute zero output rows.
     """
     if qt.packed.ndim != 3:
         raise ValueError(
@@ -78,6 +117,8 @@ def w4a16_grouped_matmul(
             f"shape {qt.packed.shape}")
     if x.ndim != 3:
         raise ValueError(f"expected x[E, C, D], got shape {x.shape}")
+    if act not in ("a16", "a8"):
+        raise ValueError(f"act must be 'a16' or 'a8', got {act!r}")
     e, c, d = x.shape
     if e != qt.packed.shape[0]:
         raise ValueError(f"x experts E={e} != weight experts {qt.packed.shape[0]}")
@@ -85,6 +126,10 @@ def w4a16_grouped_matmul(
         raise ValueError(f"x Ci={d} != weight Ci={qt.shape[-2]}")
     co = qt.packed.shape[-1]
     group = qt.group_size
+    out_dtype = x.dtype
+
+    if act == "a8":
+        x, xs = quantize_acts_per_token(x)  # int8 codes, (e, c, 1) f32
 
     # decode-sized c (< block_c, e.g. MLA absorbed B rows per head): bc pins
     # to the 8-padded row count — one C-grid step, cached per shape
@@ -92,28 +137,43 @@ def w4a16_grouped_matmul(
     c_pad = _round_up(c, bc)
     if c_pad != c:
         x = jnp.pad(x, ((0, 0), (0, c_pad - c), (0, 0)))
-    bco = min(block_co, co)
-    if co % bco != 0:
-        raise ValueError(f"Co={co} not divisible by block_co={bco}")
+        if act == "a8":
+            xs = jnp.pad(xs, ((0, 0), (0, c_pad - c), (0, 0)))
+    bco = _fit_block_co(co, block_co)
     n_c, n_co, n_k = c_pad // bc, co // bco, d // group
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
-        grid=(e, n_c, n_co, n_k),
-        in_specs=[
+    if act == "a8":
+        kernel = functools.partial(_kernel_a8, n_k=n_k)
+        operands = (x, xs, qt.packed, qt.scales, qt.zeros)
+        in_specs = [
+            pl.BlockSpec((1, bc, group), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bc, 1), lambda e, i, j, k: (e, i, 0)),
+            pl.BlockSpec((1, group // 2, bco), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
+        ]
+    else:
+        kernel = functools.partial(_kernel, n_k=n_k)
+        operands = (x, qt.packed, qt.scales, qt.zeros)
+        in_specs = [
             pl.BlockSpec((1, bc, group), lambda e, i, j, k: (e, i, k)),
             pl.BlockSpec((1, group // 2, bco), lambda e, i, j, k: (e, k, j)),
             pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
             pl.BlockSpec((1, 1, bco), lambda e, i, j, k: (e, k, j)),
-        ],
+        ]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(e, n_c, n_co, n_k),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bc, bco), lambda e, i, j, k: (e, i, j)),
-        out_shape=jax.ShapeDtypeStruct((e, c_pad, co), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((e, c_pad, co), out_dtype),
         scratch_shapes=[pltpu.VMEM((bc, bco), jnp.float32)],
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, qt.packed, qt.scales, qt.zeros)
+    )(*operands)
 
     return out[:, :c] if c_pad != c else out
 

@@ -1,9 +1,20 @@
-"""W4A16 group-wise dequant-inside-matmul Pallas TPU kernel.
+"""W4A16/W4A8 group-wise dequant-inside-matmul Pallas TPU kernel.
 
 TPU adaptation of the paper's LMDeploy-derived CUDA W4A16 GEMM (§2.3): int4
 weights stay packed in HBM; each grid step DMAs one packed block into VMEM,
 expands to bf16 *in VMEM*, and feeds the MXU.  HBM traffic for weights is ~¼
 of bf16, which is the roofline win for memory-bound decode GEMMs.
+
+The ``act="a8"`` body is the compute-bound *prefill* variant (FPTQ / arxiv
+2311.05161): activations arrive pre-quantized to per-token symmetric int8
+with their ``(bt, 1)`` scales riding along as a VMEM operand, the packed int4
+block unpacks to zero-point-folded *int8 codes* instead of f32, and each grid
+step contracts int8×int4→int32 on the MXU.  Weight scales differ per
+quantization group (= per ``k`` step), so the int32 partial product is
+rescaled by ``act_scale[bt,1] · weight_scale[1,bco]`` at each group boundary
+into the f32 VMEM accumulator — the integer accumulation spans exactly one
+group's contraction, which is the widest span over which a single rescale is
+valid.
 
 Layout contract (see ``repro.core.quantize``): packing is along the
 contraction axis in group-split layout, so with ``block_ci == group_size`` a
@@ -23,16 +34,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantize import QuantizedTensor
+from repro.core.quantize import QuantizedTensor, quantize_acts_per_token
+from repro.kernels import tpu_compiler_params
 
 DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_CO = 256
-
-# jax renamed TPUCompilerParams -> CompilerParams across releases; take
-# whichever this version ships
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams"
-)
 
 
 def _dequant_block(packed, scale, zero):
@@ -46,6 +52,21 @@ def _dequant_block(packed, scale, zero):
     return (codes.astype(jnp.float32) - zero.astype(jnp.float32)) * scale.astype(
         jnp.float32
     )
+
+
+def _dequant_block_i8(packed, zero):
+    """Expand one packed weight block to zero-point-folded *int8* codes.
+
+    ``zeros`` are stored float-domain but integer-valued (``round`` in
+    ``compute_qparams``); folding them keeps the block on the MXU's int8
+    operand path.  Codes live in ``[0, 15]`` so ``codes − zero`` fits int8
+    for any zero in ``[-112, 127]``; the clip guards pathological
+    offset-only groups, mirrored exactly by the XLA oracle."""
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int32)
+    codes = jnp.concatenate([lo, hi], axis=0)  # (bci, bco) group-split order
+    z = jnp.round(zero.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.clip(codes - z, -128, 127).astype(jnp.int8)
 
 
 def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
@@ -70,8 +91,51 @@ def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_a8(
+    x_ref, xs_ref, packed_ref, scales_ref, zeros_ref, o_ref, acc_ref, *, n_k
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # x (bt, bci) int8; xs (bt, 1) f32; packed (bci//2, bco) uint8
+    wq = _dequant_block_i8(packed_ref[...], zeros_ref[...])
+    part = jax.lax.dot_general(
+        x_ref[...],
+        wq,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # per-(token, group) rescale: the int32 accumulation is only valid within
+    # one quant group (weight scales change per k step), so the partial is
+    # scaled into the f32 accumulator at each group boundary
+    acc_ref[...] += (
+        part.astype(jnp.float32)
+        * scales_ref[...].astype(jnp.float32)
+        * xs_ref[...]
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _fit_block_co(co: int, block_co: int) -> int:
+    """Largest power-of-two-reduced divisor of ``co`` that is ≤ ``block_co``
+    — ragged output widths shrink the block instead of raising or copying
+    the packed weight into a padded buffer every call."""
+    bco = min(block_co, co)
+    while bco > 1 and co % bco:
+        bco //= 2
+    if co % bco:
+        raise ValueError(f"Co={co} has no usable block ≤ {block_co}")
+    return bco
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_t", "block_co", "interpret")
+    jax.jit, static_argnames=("block_t", "block_co", "interpret", "act")
 )
 def w4a16_matmul(
     x: jax.Array,
@@ -80,14 +144,19 @@ def w4a16_matmul(
     block_t: int = DEFAULT_BLOCK_T,
     block_co: int = DEFAULT_BLOCK_CO,
     interpret: bool = False,
+    act: str = "a16",
 ) -> jax.Array:
     """``x[..., Ci] @ dequant(qt)[Ci, Co] -> [..., Co]`` via Pallas.
 
     The contraction block is pinned to the quantization group size so each
     grid step sees whole groups (one scales/zeros row per step).
+    ``act="a8"`` quantizes ``x`` per token to symmetric int8 outside the
+    kernel (one XLA pass) and runs the int8×int4→int32 body.
     """
     if qt.packed.ndim != 2:
         raise ValueError("pallas kernel handles 2-D weights; got leading dims")
+    if act not in ("a16", "a8"):
+        raise ValueError(f"act must be 'a16' or 'a8', got {act!r}")
     orig_shape = x.shape
     ci = orig_shape[-1]
     co = qt.packed.shape[1]
@@ -102,33 +171,51 @@ def w4a16_matmul(
     # keyed on (shape, blocks) — makes steady-state decode compile exactly
     # once (asserted by test_decode_tiny_t_no_recompile)
     bt = min(block_t, _round_up(t, 8))
-    bco = min(block_co, co)
+    bco = _fit_block_co(co, block_co)
     bci = group  # one quant group per contraction step
+
+    if act == "a8":
+        x2, xs = quantize_acts_per_token(x2)  # int8 codes, (t, 1) f32 scales
 
     t_pad = _round_up(t, bt)
     if t_pad != t:
         x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
-    if co % bco != 0:
-        raise ValueError(f"Co={co} not divisible by block_co={bco}")
+        if act == "a8":
+            xs = jnp.pad(xs, ((0, t_pad - t), (0, 0)))
     n_t, n_co, n_k = t_pad // bt, co // bco, ci // bci
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
-        grid=(n_t, n_co, n_k),
-        in_specs=[
+    if act == "a8":
+        kernel = functools.partial(_kernel_a8, n_k=n_k)
+        operands = (x2, xs, qt.packed, qt.scales, qt.zeros)
+        in_specs = [
+            pl.BlockSpec((bt, bci), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bt, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bci // 2, bco), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
+        ]
+    else:
+        kernel = functools.partial(_kernel, n_k=n_k)
+        operands = (x2, qt.packed, qt.scales, qt.zeros)
+        in_specs = [
             pl.BlockSpec((bt, bci), lambda i, j, k: (i, k)),
             pl.BlockSpec((bci // 2, bco), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bco), lambda i, j, k: (k, j)),
-        ],
+        ]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_t, n_co, n_k),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, bco), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t_pad, co), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bco), jnp.float32)],
-        compiler_params=_CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x2, qt.packed, qt.scales, qt.zeros)
+    )(*operands)
 
     if t_pad != t:
         out = out[:t]

@@ -33,6 +33,12 @@ def main(argv=None):
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--rate", type=float, default=50.0, help="req/s (Poisson)")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--act-quant", choices=("a16", "a8_prefill"),
+                    default="a16",
+                    help="activation quantization: a16 (default, bf16/f32 "
+                         "activations) or a8_prefill (per-token int8 "
+                         "activations on prefill-chunk GEMMs for A8-eligible "
+                         "layers; decode stays A16)")
     ap.add_argument("--group-size", type=int, default=None)
     ap.add_argument("--ptq-artifact", default=None,
                     help="dir for the PTQ artifact: save on first boot, "
@@ -76,7 +82,8 @@ def main(argv=None):
                     help="seed for the --chaos fault plan")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = get_config(args.arch, smoke=args.smoke).with_(
+        act_quant=args.act_quant)
     if not args.no_quant:
         cfg = cfg.with_(dtype="float32")  # PTQ math in f32 at smoke scale
     params = api.init_model(jax.random.PRNGKey(0), cfg)

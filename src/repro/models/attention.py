@@ -36,9 +36,9 @@ def init_gqa(key, cfg: ModelConfig) -> Dict[str, Any]:
 def _qkv(p, x, positions, cfg: ModelConfig, backend: str):
     b, t, _ = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
-    q = L.apply_linear(p["wq"], x, backend=backend).reshape(b, t, h, dh)
-    k = L.apply_linear(p["wk"], x, backend=backend).reshape(b, t, hkv, dh)
-    v = L.apply_linear(p["wv"], x, backend=backend).reshape(b, t, hkv, dh)
+    q = L.apply_linear(p["wq"], x, backend=backend, act=cfg.act_kernel).reshape(b, t, h, dh)
+    k = L.apply_linear(p["wk"], x, backend=backend, act=cfg.act_kernel).reshape(b, t, hkv, dh)
+    v = L.apply_linear(p["wv"], x, backend=backend, act=cfg.act_kernel).reshape(b, t, hkv, dh)
     q = L.apply_rope(q, positions, theta=cfg.rope_theta, variant=cfg.rope)
     k = L.apply_rope(k, positions, theta=cfg.rope_theta, variant=cfg.rope)
     # anchor layouts: batch on data, heads on model (dropped if indivisible)
@@ -155,7 +155,7 @@ def gqa_prefill(
     b, t, _ = x.shape
     q, k, v = _qkv(p, x, positions, cfg, backend)
     out = _full_attention(q, k, v, positions, cfg, causal)
-    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend, act=cfg.act_kernel)
     return y, {"k": k, "v": v, "lens": jnp.full((b,), t, jnp.int32)}
 
 
@@ -265,7 +265,7 @@ def gqa_prefill_chunk(
             causal=True,
         )
     y = L.apply_linear(p["wo"], out.reshape(b, t, -1).astype(x.dtype),
-                       backend=backend)
+                       backend=backend, act=cfg.act_kernel)
     return y, new_pool
 
 
@@ -323,7 +323,7 @@ def gqa_decode(
         out = _attend_rows(qh, k_cache, v_cache, valid, scale)
         new_cache = {"k": k_cache, "v": v_cache, "lens": lens + 1}
     y = L.apply_linear(
-        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
+        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend, act=cfg.act_kernel
     )
     return y, new_cache
 
@@ -437,7 +437,7 @@ def gqa_decode_paged(
             v_s=gather_pages(new_pool["v_s"], table_rows) if cfg.kv_quant else None,
         )
     y = L.apply_linear(
-        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend
+        p["wo"], out.reshape(b, 1, h * dh).astype(x.dtype), backend=backend, act=cfg.act_kernel
     )
     return y, new_pool
 
@@ -493,9 +493,9 @@ def _mla_q(p, x, positions, cfg: ModelConfig, backend: str):
     b, t, _ = x.shape
     h = cfg.num_heads
     qk = m.qk_nope_head_dim + m.qk_rope_head_dim
-    q = L.apply_linear(p["wq_a"], x, backend=backend)
+    q = L.apply_linear(p["wq_a"], x, backend=backend, act=cfg.act_kernel)
     q = L.apply_norm(p["norm_q"], q)
-    q = L.apply_linear(p["wq_b"], q, backend=backend).reshape(b, t, h, qk)
+    q = L.apply_linear(p["wq_b"], q, backend=backend, act=cfg.act_kernel).reshape(b, t, h, qk)
     q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
     q_pe = L.apply_rope(q_pe, positions, theta=cfg.rope_theta, variant="standard")
     return q_nope, q_pe
@@ -503,7 +503,7 @@ def _mla_q(p, x, positions, cfg: ModelConfig, backend: str):
 
 def _mla_latent(p, x, positions, cfg: ModelConfig, backend: str):
     m = cfg.mla
-    kv = L.apply_linear(p["wkv_a"], x, backend=backend)
+    kv = L.apply_linear(p["wkv_a"], x, backend=backend, act=cfg.act_kernel)
     ckv, k_pe = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
     ckv = L.apply_norm(p["norm_kv"], ckv)
     k_pe = L.apply_rope(
@@ -521,7 +521,7 @@ def mla_prefill(
     h = cfg.num_heads
     q_nope, q_pe = _mla_q(p, x, positions, cfg, backend)
     ckv, k_pe = _mla_latent(p, x, positions, cfg, backend)
-    kvb = L.apply_linear(p["wkv_b"], ckv, backend=backend).reshape(
+    kvb = L.apply_linear(p["wkv_b"], ckv, backend=backend, act=cfg.act_kernel).reshape(
         b, t, h, m.qk_nope_head_dim + m.v_head_dim
     )
     k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
@@ -537,7 +537,7 @@ def mla_prefill(
     k = shard_hint(k, dp, None, "model", None)
     v = shard_hint(v, dp, None, "model", None)
     out = chunked_attention(q, k, v, positions, positions, causal=causal)
-    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend)
+    y = L.apply_linear(p["wo"], out.reshape(b, t, -1), backend=backend, act=cfg.act_kernel)
     return y, {"ckv": ckv, "kpe": k_pe, "lens": jnp.full((b,), t, jnp.int32)}
 
 
@@ -613,7 +613,7 @@ def mla_prefill_chunk(
     out = _mla_absorb_out(
         p, o_lat.reshape(b * t, h, -1), cfg, backend
     ).reshape(b, t, h * m.v_head_dim)
-    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend, act=cfg.act_kernel)
     return y, new_pool
 
 
@@ -648,7 +648,7 @@ def _mla_absorb_q_lat(p, q_nope1, cfg: ModelConfig, backend: str) -> jax.Array:
 
         wk_t = p["wkv_b_absorbed"]["wk_t"]               # int4 [H, nope, r]
         x = q_nope1.astype(jnp.float32).transpose(1, 0, 2)  # [H, B, nope]
-        return K.w4a16_grouped_matmul(x, wk_t, backend=backend).transpose(
+        return K.w4a16_grouped_matmul(x, wk_t, backend=backend, act=cfg.act_kernel).transpose(
             1, 0, 2)
     w_k, _ = _mla_absorb_weights(p, cfg)
     return jnp.einsum(
@@ -664,7 +664,7 @@ def _mla_absorb_out(p, o_lat, cfg: ModelConfig, backend: str) -> jax.Array:
 
         wv = p["wkv_b_absorbed"]["wv"]                   # int4 [H, r, v]
         x = o_lat.astype(jnp.float32).transpose(1, 0, 2)    # [H, B, r]
-        return K.w4a16_grouped_matmul(x, wv, backend=backend).transpose(
+        return K.w4a16_grouped_matmul(x, wv, backend=backend, act=cfg.act_kernel).transpose(
             1, 0, 2)
     _, w_v = _mla_absorb_weights(p, cfg)
     return jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
@@ -709,7 +709,7 @@ def mla_decode(
     smax = ckv.shape[1]
     valid = jnp.arange(smax)[None, :] <= lens[:, None]
     out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg, backend)
-    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend, act=cfg.act_kernel)
     return y, {"ckv": ckv, "kpe": kpe, "lens": lens + 1}
 
 
@@ -774,7 +774,7 @@ def mla_decode_paged(
         valid = jnp.arange(ckv.shape[1])[None, :] <= write_pos[:, None]
         out = _mla_absorbed_attend(p, q_nope, q_pe, ckv, kpe, valid, cfg,
                                    backend)
-    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend)
+    y = L.apply_linear(p["wo"], out.astype(x.dtype), backend=backend, act=cfg.act_kernel)
     return y, new_pool
 
 

@@ -28,13 +28,14 @@ def init_linear(key, ci: int, co: int, dtype, bias: bool = False, scale: float |
     return p
 
 
-def apply_linear(p: Params, x: jax.Array, *, backend: str = "auto") -> jax.Array:
+def apply_linear(p: Params, x: jax.Array, *, backend: str = "auto",
+                 act: str = "a16") -> jax.Array:
     w = p["w"]
     col = _calib.current_collector()
     if col is not None:
         col.record_input(w, x)
     if isinstance(w, QuantizedTensor):
-        y = kops.w4a16_matmul(x, w, backend=backend)
+        y = kops.w4a16_matmul(x, w, backend=backend, act=act)
     else:
         # bf16 dot OUTPUT (MXU still accumulates f32 internally): keeps the
         # GSPMD-inserted row-parallel psums in bf16 — halves TP all-reduce

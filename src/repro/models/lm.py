@@ -92,7 +92,7 @@ def _block_forward(
         elif cfg.moe is not None and mixer in ("attention", "mla"):
             y2, aux = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
         else:
-            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend, act=cfg.act_kernel)
         x = x + y2
     return x, aux
 
@@ -125,7 +125,7 @@ def _block_prefill_cache(p, x, positions, cfg, *, mixer=None, backend="auto"):
         elif cfg.moe is not None and mixer in ("attention", "mla"):
             y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
         else:
-            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend, act=cfg.act_kernel)
         x = x + y2
     return x, cache
 
@@ -158,7 +158,7 @@ def _block_decode(p, x, positions, cache, cfg, *, mixer=None, backend="auto"):
         elif cfg.moe is not None:
             y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
         else:
-            y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+            y2 = M.apply_mlp(p["mlp"], h2, backend=backend, act=cfg.act_kernel)
         x = x + y2
     return x, cache
 
@@ -183,7 +183,7 @@ def _block_decode_paged(p, x, rope_pos, write_pos, pool, table_rows, cfg,
     if cfg.moe is not None:
         y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
     else:
-        y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+        y2 = M.apply_mlp(p["mlp"], h2, backend=backend, act=cfg.act_kernel)
     return x + y2, pool
 
 
@@ -208,7 +208,7 @@ def _block_prefill_chunk(p, x, start_len, chunk_len, pool, table_rows, cfg,
     if cfg.moe is not None:
         y2, _ = M.apply_moe(p["mlp"], h2, cfg, backend=backend)
     else:
-        y2 = M.apply_mlp(p["mlp"], h2, backend=backend)
+        y2 = M.apply_mlp(p["mlp"], h2, backend=backend, act=cfg.act_kernel)
     return x + y2, pool
 
 

@@ -38,15 +38,16 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, Any]:
     }
 
 
-def apply_mlp(p: Dict[str, Any], x: jax.Array, *, backend: str = "auto") -> jax.Array:
+def apply_mlp(p: Dict[str, Any], x: jax.Array, *, backend: str = "auto",
+              act: str = "a16") -> jax.Array:
     if "gate" in p:
         h = L.swiglu(
-            L.apply_linear(p["gate"], x, backend=backend),
-            L.apply_linear(p["up"], x, backend=backend),
+            L.apply_linear(p["gate"], x, backend=backend, act=act),
+            L.apply_linear(p["up"], x, backend=backend, act=act),
         )
     else:
-        h = L.gelu(L.apply_linear(p["up"], x, backend=backend))
-    return L.apply_linear(p["down"], h, backend=backend)
+        h = L.gelu(L.apply_linear(p["up"], x, backend=backend, act=act))
+    return L.apply_linear(p["down"], h, backend=backend, act=act)
 
 
 # ------------------------------------------------------------------- MoE ----
@@ -69,7 +70,8 @@ def init_moe(key, cfg: ModelConfig) -> Dict[str, Any]:
     return p
 
 
-def _expert_matmul(x: jax.Array, w, *, backend: str = "auto") -> jax.Array:
+def _expert_matmul(x: jax.Array, w, *, backend: str = "auto",
+                   act: str = "a16") -> jax.Array:
     """Per-expert contraction ``x[nblk, E, C, D] @ w[E, D, F] → [nblk, E, C, F]``
     in f32.
 
@@ -81,7 +83,7 @@ def _expert_matmul(x: jax.Array, w, *, backend: str = "auto") -> jax.Array:
     nblk, e, c, d = x.shape
     if isinstance(w, QuantizedTensor):
         xe = x.astype(jnp.float32).transpose(1, 0, 2, 3).reshape(e, nblk * c, d)
-        y = kops.w4a16_grouped_matmul(xe, w, backend=backend)
+        y = kops.w4a16_grouped_matmul(xe, w, backend=backend, act=act)
         return y.reshape(e, nblk, c, -1).transpose(1, 0, 2, 3)
     return jnp.einsum(
         "becd,edf->becf", x.astype(jnp.float32), w.astype(jnp.float32))
@@ -166,22 +168,27 @@ def apply_moe(
     # expert compute (EP-shardable over stacked weights); after PTQ the
     # stacked [E, Ci, Co] weights are int4 QuantizedTensors and contract
     # through the grouped W4A16 kernel — never dequantized model-side
+    act = cfg.act_kernel
     ew = p["experts"]
-    gate_h = _expert_matmul(buf, ew["gate"], backend=backend)
-    up_h = _expert_matmul(buf, ew["up"], backend=backend)
+    gate_h = _expert_matmul(buf, ew["gate"], backend=backend, act=act)
+    up_h = _expert_matmul(buf, ew["up"], backend=backend, act=act)
     hidden = jax.nn.silu(gate_h) * up_h
     from repro.core import calibration as _calib
+    from repro.core.quantize import a8_roundtrip_error
 
     col = _calib.current_collector()
     if col is not None:  # per-expert input stats (einsums bypass apply_linear)
         col.record_explicit(
             ("mlp", "experts", "gate"),
             jnp.max(jnp.abs(buf.astype(jnp.float32)), axis=(0, 2)),
+            a8_err=a8_roundtrip_error(buf),
         )
         col.record_explicit(
-            ("mlp", "experts", "down"), jnp.max(jnp.abs(hidden), axis=(0, 2))
+            ("mlp", "experts", "down"), jnp.max(jnp.abs(hidden), axis=(0, 2)),
+            a8_err=a8_roundtrip_error(hidden),
         )
-    out = _expert_matmul(hidden, ew["down"], backend=backend).astype(x.dtype)
+    out = _expert_matmul(hidden, ew["down"], backend=backend,
+                         act=act).astype(x.dtype)
 
     # combine (block-local gather, mirroring the dispatch)
     out_flat = out.reshape(nblk, m.num_experts * capacity, d)
@@ -191,7 +198,7 @@ def apply_moe(
     y = weighted.reshape(n, m.top_k, d).sum(1).astype(x.dtype)
 
     if "shared" in p:
-        y = y + apply_mlp(p["shared"], xf, backend=backend)
+        y = y + apply_mlp(p["shared"], xf, backend=backend, act=act)
 
     # load-balancing aux loss (Switch-style)
     me = probs.mean(0)                                           # [E]

@@ -201,6 +201,11 @@ class ServingEngine:
         ok, why = api.paged_supported(cfg)
         if not ok:
             raise NotImplementedError(f"paged serving: {why}")
+        if cfg.act_quant not in ("a16", "a8_prefill"):
+            raise ValueError(
+                f"act_quant={cfg.act_quant!r}: expected 'a16' or 'a8_prefill' "
+                "(a8_prefill routes prefill-chunk GEMMs on A8-eligible layers "
+                "through the int8-activation kernel body; decode stays A16)")
         self.cfg = cfg
         self.params = params
         self.B = batch_size
