@@ -4,6 +4,11 @@ continuous-batching engine (the paper's vLLM deployment flow).
     PYTHONPATH=src python -m repro.launch.serve --arch codellama-7b --smoke \
         --requests 12 [--no-quant] [--ptq-artifact DIR]
 
+Beyond attention-only decoders the same flow serves hybrid SSM
+(``--arch zamba2-7b``: per-layer fixed-rows state next to the paged
+attention KV) and encoder-decoder (``--arch whisper-medium``: synthetic
+encoder frames per request, deduplicated read-only encoder pages).
+
 ``--ptq-artifact DIR`` makes boot load-*or*-quantize: the first run saves the
 quantized pytree there; later runs deserialize it and skip calibration + the
 α search entirely (a config change invalidates the artifact via its hash).
@@ -118,7 +123,16 @@ def main(argv=None):
             FaultSpec("prefix_evict", every=5, times=2),
             FaultSpec("decode_launch", step=6, times=2),
             FaultSpec("prefill_launch", op=2, times=1),
+            FaultSpec("fixed_drain", op=0, times=1),
+            FaultSpec("enc_evict", op=1, times=1),
         ], seed=args.fault_seed)
+    # the token prefix cache is attention-only (the engine rejects it for
+    # hybrid SSM / enc-dec configs — see state leaves in serving/engine.py)
+    leaves = api.state_leaves(cfg)
+    prefix_cache = (args.prefix_cache == "on" and leaves == (api.KV_PAGES,))
+    if args.prefix_cache == "on" and not prefix_cache:
+        print(f"[note] token prefix cache disabled: {cfg.family} slots carry "
+              f"state leaves {leaves}")
     eng = ServingEngine(params, cfg, batch_size=args.batch_size,
                         max_seq=args.max_seq, backend="xla",
                         page_size=args.page_size,
@@ -126,7 +140,7 @@ def main(argv=None):
                         prefill_mode=args.prefill_mode,
                         max_prefill_tokens=args.max_prefill_tokens,
                         reservation=args.reservation,
-                        prefix_cache=args.prefix_cache == "on",
+                        prefix_cache=prefix_cache,
                         max_queue=args.max_queue,
                         fault_plan=fault_plan,
                         strict=not args.chaos)
@@ -138,13 +152,25 @@ def main(argv=None):
     arrive = base + np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     sys_p = rng.integers(2, cfg.vocab_size,
                          args.shared_prefix_len).astype(np.int32)
+
+    def frames(i):
+        # enc-dec requests carry synthetic encoder frames; every third
+        # request repeats the first one's audio so the exact-match encoder
+        # page cache has something to deduplicate
+        if not eng.has_enc:
+            return None
+        r = np.random.default_rng(1000 + (0 if i % 3 == 0 else i))
+        t = 6 + (0 if i % 3 == 0 else i % 5)
+        return (r.standard_normal((t, cfg.d_model)) * 0.1).astype(np.float32)
+
     reqs = [Request(uid=i,
                     prompt=np.concatenate(
                         [sys_p,
                          rng.integers(2, cfg.vocab_size, 10).astype(np.int32)]),
                     max_tokens=args.max_tokens, arrival_t=float(arrive[i]),
                     deadline_s=args.deadline_s,
-                    ttft_deadline_s=args.ttft_deadline_s)
+                    ttft_deadline_s=args.ttft_deadline_s,
+                    frames=frames(i))
             for i in range(args.requests)]
     t0 = time.perf_counter()
     accepted = sum(eng.submit(r) for r in reqs)
@@ -168,8 +194,12 @@ def main(argv=None):
           f"{stats.grown_pages} pages grown lazily, "
           f"{stats.preemptions} preemptions "
           f"({stats.swapped_out_bytes/1e6:.1f}MB swapped out, "
-          f"{stats.swapped_in_bytes/1e6:.1f}MB back in)")
-    if args.prefix_cache == "on":
+          f"of which {stats.swapped_fixed_bytes/1e6:.1f}MB fixed-rows "
+          f"state, {stats.swapped_in_bytes/1e6:.1f}MB back in)")
+    if eng.has_enc:
+        print(f"encoder pages: {stats.enc_encodes} encodes, "
+              f"{stats.enc_hits} exact-match hits")
+    if prefix_cache:
         hit = stats.prefix_hits / max(stats.admitted, 1)
         print(f"prefix-cache: hit-rate {hit:.0%} "
               f"({stats.prefix_hits}/{stats.admitted} admissions, "

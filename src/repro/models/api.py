@@ -95,6 +95,25 @@ def init_decode_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int = 0)
 
 
 # ---------------------------------------------------------- paged serving ---
+# State-leaf kinds a slot can own (see serving/ — the engine generalizes
+# "slot state" beyond KV pages):
+#   kv_pages   read-write paged KV (attention / MLA / hybrid shared-attn)
+#   fixed_rows per-layer O(1) SSM state rows, swapped alongside KV pages
+#   shared_ro  refcounted read-only pages (encoder cross-attn K/V)
+KV_PAGES = "kv_pages"
+FIXED_ROWS = "fixed_rows"
+SHARED_RO = "shared_ro"
+
+
+def state_leaves(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Which state-leaf kinds a slot of this config owns."""
+    if cfg.encdec:
+        return (KV_PAGES, SHARED_RO)
+    if cfg.family == "hybrid":
+        return (KV_PAGES, FIXED_ROWS)
+    return (KV_PAGES,)
+
+
 def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
     """Whether the paged serving cache covers this config (reason if not)."""
     return LM.paged_supported(cfg)
@@ -103,8 +122,31 @@ def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
     """Per-layer KV pools ``[L, num_pages, page_size, ...]`` for the serving
     engine's block-table pager (``repro.serving.kv_cache``).  With
-    ``cfg.kv_quant`` the pools are int8 plus per-row f32 scale pools."""
+    ``cfg.kv_quant`` the pools are int8 plus per-row f32 scale pools.
+    Enc-dec configs additionally carry the read-only encoder page pool
+    under ``"enc"``; hybrid configs page only the shared-attention
+    applications (one pool layer per group)."""
+    if cfg.encdec:
+        return W.init_whisper_paged_cache(cfg, num_pages, page_size)
     return LM.init_paged_cache(cfg, num_pages, page_size)
+
+
+def init_fixed_state(cfg: ModelConfig, batch: int):
+    """Fixed-rows state tree ``[M, B, ...]`` (slot axis second) for configs
+    whose :func:`state_leaves` include ``fixed_rows``; the same
+    :func:`gather_pool_rows` / :func:`scatter_pool_rows` helpers move a
+    slot's rows for swap because the slot axis matches the pools' page
+    axis."""
+    return LM.init_fixed_state(cfg, batch)
+
+
+def encode_kv_fn(params, frames, cfg: ModelConfig, *, backend: str = "auto"):
+    """Encoder pass + per-decoder-layer cross K/V rows
+    (``{"xk"/"xv": [L, B, T_enc, Hkv, Dh]}``) for admission into the
+    read-only encoder page pool."""
+    if not cfg.encdec:
+        raise NotImplementedError("encoder K/V is enc-dec only")
+    return W.whisper_enc_kv(params, frames, cfg, backend=backend)
 
 
 def quantize_raw_paged(raw, cfg: ModelConfig):
@@ -178,25 +220,49 @@ def copy_pool_page(pools, src: jax.Array, dst: jax.Array):
 
 def prefill_chunk_fn(params, batch, cache, table_rows, start_len, chunk_len,
                      cfg: ModelConfig, *, backend: str = "auto",
-                     last_idx=None):
+                     last_idx=None, fixed=None, slots=None,
+                     enc_table=None, enc_len=None):
     """Chunked prefill straight into the paged pools: one ``[B, T]`` prompt
     chunk per slot at logical positions ``start_len[b] + t``; KV scatters
     per chunk, attention reads every earlier token (cached prefix and prior
     chunks alike) through ``table_rows``.  Returns (per-row last-token
-    logits — meaningful on final chunks — and the updated pools)."""
+    logits — meaningful on final chunks — and the updated pools).
+
+    Hybrid configs additionally take/return the fixed-rows state tree
+    (``fixed`` + the bucket's ``slots``) — a 3-tuple result; enc-dec
+    configs take the slot's encoder page table + valid length."""
     if cfg.encdec:
-        raise NotImplementedError("paged prefill is decoder-only")
+        return W.whisper_prefill_chunk(
+            params, batch["tokens"], cache, start_len, chunk_len, table_rows,
+            enc_table, enc_len, cfg, backend=backend, last_idx=last_idx)
+    if cfg.family == "hybrid":
+        return LM.hybrid_prefill_chunk(
+            params, batch["tokens"], cache, fixed, slots, start_len,
+            chunk_len, table_rows, cfg, backend=backend, last_idx=last_idx)
     return LM.lm_prefill_chunk(params, batch["tokens"], cache, start_len,
                                chunk_len, table_rows, cfg, backend=backend,
                                last_idx=last_idx, **_lm_kw(batch))
 
 
 def decode_paged_fn(params, batch, cache, table_rows, cfg: ModelConfig, *,
-                    backend: str = "auto"):
+                    backend: str = "auto", fixed=None, active=None,
+                    enc_table=None, enc_len=None):
     """One decode step against paged pools; ``table_rows[B, P]`` maps each
     slot's logical pages to pool pages.  The attention impl is picked by
     ``cfg.paged_attn_impl`` (+ ``backend``): the fused Pallas page-gather
-    kernel on TPU / interpret, the jnp dense gather as the XLA reference."""
+    kernel on TPU / interpret, the jnp dense gather as the XLA reference.
+
+    Hybrid configs take/return the fixed-rows tree plus an ``active[B]``
+    mask (rows not decoding keep their SSM state) — a 3-tuple result;
+    enc-dec configs take the encoder page table + valid length."""
+    if cfg.encdec:
+        return W.whisper_decode_paged(
+            params, batch["token"], cache, batch["position"], table_rows,
+            enc_table, enc_len, cfg, backend=backend)
+    if cfg.family == "hybrid":
+        return LM.hybrid_decode_paged(
+            params, batch["token"], cache, fixed, batch["position"],
+            table_rows, active, cfg, backend=backend)
     return LM.lm_decode_paged(params, batch["token"], cache, batch["position"],
                               table_rows, cfg, backend=backend)
 

@@ -164,20 +164,22 @@ def _block_decode(p, x, positions, cache, cfg, *, mixer=None, backend="auto"):
 
 
 def _block_decode_paged(p, x, rope_pos, write_pos, pool, table_rows, cfg,
-                        *, backend="auto"):
+                        *, mixer=None, backend="auto"):
     """Attention-mixer block decode against a paged KV pool (see
-    ``models/attention.py`` for the page-table convention)."""
+    ``models/attention.py`` for the page-table convention).  ``mixer``
+    overrides ``cfg.mixer`` (the hybrid stack's weight-shared attention)."""
+    mixer = mixer or cfg.mixer
     h = L.apply_norm(p["norm1"], x)
-    if cfg.mixer == "attention":
+    if mixer == "attention":
         y, pool = A.gqa_decode_paged(
             p["mixer"], h, rope_pos, pool, table_rows, write_pos, cfg,
             backend=backend)
-    elif cfg.mixer == "mla":
+    elif mixer == "mla":
         y, pool = A.mla_decode_paged(
             p["mixer"], h, rope_pos, pool, table_rows, write_pos, cfg,
             backend=backend)
     else:
-        raise ValueError(f"paged decode needs an attention mixer, got {cfg.mixer}")
+        raise ValueError(f"paged decode needs an attention mixer, got {mixer}")
     x = x + y
     h2 = L.apply_norm(p["norm2"], x)
     if cfg.moe is not None:
@@ -188,21 +190,23 @@ def _block_decode_paged(p, x, rope_pos, write_pos, pool, table_rows, cfg,
 
 
 def _block_prefill_chunk(p, x, start_len, chunk_len, pool, table_rows, cfg,
-                         *, backend="auto"):
+                         *, mixer=None, backend="auto"):
     """Attention-mixer block chunked prefill straight against a paged KV pool
-    (see ``models/attention.py`` for the chunk contract).  Returns
+    (see ``models/attention.py`` for the chunk contract).  ``mixer`` overrides
+    ``cfg.mixer`` (the hybrid stack's weight-shared attention).  Returns
     (x, updated pool)."""
+    mixer = mixer or cfg.mixer
     h = L.apply_norm(p["norm1"], x)
-    if cfg.mixer == "attention":
+    if mixer == "attention":
         y, pool = A.gqa_prefill_chunk(
             p["mixer"], h, pool, table_rows, start_len, chunk_len, cfg,
             backend=backend)
-    elif cfg.mixer == "mla":
+    elif mixer == "mla":
         y, pool = A.mla_prefill_chunk(
             p["mixer"], h, pool, table_rows, start_len, chunk_len, cfg,
             backend=backend)
     else:
-        raise ValueError(f"paged prefill needs an attention mixer, got {cfg.mixer}")
+        raise ValueError(f"paged prefill needs an attention mixer, got {mixer}")
     x = x + y
     h2 = L.apply_norm(p["norm2"], x)
     if cfg.moe is not None:
@@ -428,21 +432,40 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int) -> Any:
 
 
 def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
-    """Whether the paged serving cache covers this config."""
+    """Whether the paged serving engine covers this config.
+
+    Three state-leaf layouts are served: pure KV-page stacks (attention /
+    MLA decoders), hybrid stacks (KV pages for the weight-shared attention
+    applications + fixed SSM state rows swapped alongside them), and
+    enc-dec (KV pages for decoder self-attention + read-only encoder
+    pages for cross-attention)."""
     if cfg.encdec:
-        return False, "enc-dec (whisper) decode is not paged"
+        return True, ""
     if cfg.family == "hybrid":
-        return False, "hybrid stacks mix O(1) SSM state with shared-attn KV"
+        return True, ""
     if cfg.mixer not in ("attention", "mla"):
         return False, f"{cfg.mixer} state is O(1) per slot; paging buys nothing"
     return True, ""
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
-    """Per-layer paged KV pools (stacked over layers, shared across slots)."""
+    """Per-layer paged KV pools (stacked over layers, shared across slots).
+
+    Hybrid stacks page only the shared-attention applications (one pool
+    layer per group); their SSM state lives in the separate fixed-rows tree
+    from :func:`init_fixed_state`.  Enc-dec pools live in
+    ``models/whisper.py`` (dispatched by ``models/api.py``)."""
     ok, why = paged_supported(cfg)
     if not ok:
         raise NotImplementedError(why)
+    if cfg.encdec:
+        raise ValueError("enc-dec paged pools live in models/whisper.py")
+    if cfg.family == "hybrid":
+        g, _, _ = _hybrid_layout(cfg)
+        return {"layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[A.init_gqa_page_pool(cfg, num_pages, page_size)
+              for _ in range(g)])}
     mk = (
         (lambda: A.init_mla_page_pool(cfg, num_pages, page_size))
         if cfg.mixer == "mla"
@@ -450,6 +473,24 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Any:
     )
     return {"layers": jax.tree.map(
         lambda *xs: jnp.stack(xs), *[mk() for _ in range(cfg.num_layers)])}
+
+
+def init_fixed_state(cfg: ModelConfig, batch: int) -> Any:
+    """Fixed-rows state leaves for hybrid stacks: per-layer Mamba2 state with
+    the slot axis SECOND (``[M, B, ...]``) so the pool-row swap helpers
+    (``api.gather_pool_rows`` / ``api.scatter_pool_rows``, axis 1) move a
+    slot's rows without reshaping.  Layer order is group-major (the ``g*k``
+    grouped mamba layers, then the tail)."""
+    if cfg.family != "hybrid":
+        raise ValueError(f"fixed-rows state is hybrid-only, got {cfg.family}")
+    m = cfg.num_layers
+    d_inner, hp, nh, n = S.mamba_dims(cfg)
+    km1 = cfg.conv_kernel - 1
+    return {
+        "h": jnp.zeros((m, batch, nh, hp, n), jnp.float32),
+        "conv_x": jnp.zeros((m, batch, km1, d_inner), cfg.jdtype),
+        "conv_bc": jnp.zeros((m, batch, km1, 2 * n), cfg.jdtype),
+    }
 
 
 def quantize_raw_paged(raw: Any, cfg: ModelConfig) -> Any:
@@ -496,6 +537,130 @@ def lm_decode_paged(
     x, nst = jax.lax.scan(step, x, (p["layers"], cache["layers"]))
     logits = _lm_head(p, x, cfg, backend)[:, 0]
     return logits, {"layers": nst}
+
+
+def _group_fixed(fixed, g, k):
+    """Split the [M, B, ...] fixed-state tree into grouped [g, k, B, ...] and
+    tail [tail, B, ...] trees (group-major layer order, tail last)."""
+    grouped = jax.tree.map(lambda a: a[: g * k].reshape(g, k, *a.shape[1:]), fixed)
+    tail_st = jax.tree.map(lambda a: a[g * k:], fixed)
+    return grouped, tail_st
+
+
+def _ungroup_fixed(grouped, tail_st, tail):
+    flat = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), grouped)
+    if tail:
+        flat = jax.tree.map(
+            lambda a, t_: jnp.concatenate([a, t_], axis=0), flat, tail_st)
+    return flat
+
+
+def hybrid_decode_paged(
+    p: Params,
+    token: jax.Array,             # [B, 1] int32
+    cache: Any,                   # g shared-attn pools from init_paged_cache
+    fixed: Any,                   # [M, B, ...] tree from init_fixed_state
+    position: jax.Array,          # [B] int32 current position
+    table_rows: jax.Array,        # [B, P] int32 page table
+    active: jax.Array,            # [B] bool: rows actually decoding
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Any, Any]:
+    """One hybrid decode step: mamba layers update their fixed state rows,
+    the weight-shared attention block hits one paged pool per group.  Rows
+    with ``active=False`` keep their fixed state untouched (the trash-page
+    convention masks their KV writes, but an SSM recurrence would otherwise
+    corrupt a parked slot's state).  Returns (logits, pools, fixed)."""
+    b = token.shape[0]
+    pos = position[:, None]
+    x = L.apply_embedding(p["embed"], token)
+    g, k, tail = _hybrid_layout(cfg)
+    grouped, tail_st = _group_fixed(fixed, g, k)
+    shared = p["shared"]
+    scfg = cfg.with_(moe=None)
+
+    def mamba_step(x, inp):
+        lp, st = inp
+        x, st = _block_decode(lp, x, pos, st, cfg, mixer="mamba2", backend=backend)
+        return x, st
+
+    def group_step(x, inp):
+        gp, gst, pool = inp
+        x, new_gst = jax.lax.scan(mamba_step, x, (gp, gst))
+        x, pool = _block_decode_paged(
+            shared, x, pos, position, pool, table_rows, scfg,
+            mixer="attention", backend=backend)
+        return x, (new_gst, pool)
+
+    x, (ngst, npools) = jax.lax.scan(
+        group_step, x, (p["groups"], grouped, cache["layers"]))
+    ntail = tail_st
+    if tail:
+        x, ntail = jax.lax.scan(mamba_step, x, (p["tail"], tail_st))
+    new_fixed = _ungroup_fixed(ngst, ntail, tail)
+    new_fixed = jax.tree.map(
+        lambda new, old: jnp.where(
+            active.reshape((1, b) + (1,) * (new.ndim - 2)), new, old),
+        new_fixed, fixed)
+    logits = _lm_head(p, x, cfg, backend)[:, 0]
+    return logits, {"layers": npools}, new_fixed
+
+
+def hybrid_prefill_chunk(
+    p: Params,
+    tokens: jax.Array,            # [B, T] int32 chunk tokens (right-padded)
+    cache: Any,                   # g shared-attn pools
+    fixed: Any,                   # [M, Bslots, ...] full fixed-state tree
+    slots: jax.Array,             # [B] int32 slot ids of the bucket rows
+    start_len: jax.Array,         # [B] int32 tokens already processed
+    chunk_len: jax.Array,         # [B] int32 valid rows of this chunk
+    table_rows: jax.Array,        # [B, P] int32 page table
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+    last_idx=None,
+) -> Tuple[jax.Array, Any, Any]:
+    """Chunked hybrid prefill: mamba layers run the chunked SSD with state-in
+    (``mamba2_prefill_chunk``), the shared attention block scatters KV into
+    its per-group pool.  Fixed rows are gathered at ``slots`` on the way in
+    and scattered back on the way out — every bucket row is an actively
+    prefilling slot, so the scatter is unconditional.
+    Returns (last-chunk-token logits, pools, fixed)."""
+    b, t = tokens.shape[:2]
+    x = _embed_in(p, tokens, cfg, None)
+    g, k, tail = _hybrid_layout(cfg)
+    fx = jax.tree.map(lambda a: a[:, slots], fixed)
+    grouped, tail_st = _group_fixed(fx, g, k)
+    shared = p["shared"]
+    scfg = cfg.with_(moe=None)
+
+    def mamba_body(x, inp):
+        lp, st = inp
+        h = L.apply_norm(lp["norm1"], x)
+        y, st = S.mamba2_prefill_chunk(
+            lp["mixer"], h, st, chunk_len, cfg, backend=backend)
+        return x + y, st
+
+    def group_body(x, inp):
+        gp, gst, pool = inp
+        x, new_gst = jax.lax.scan(mamba_body, x, (gp, gst))
+        x, pool = _block_prefill_chunk(
+            shared, x, start_len, chunk_len, pool, table_rows, scfg,
+            mixer="attention", backend=backend)
+        return x, (new_gst, pool)
+
+    x, (ngst, npools) = jax.lax.scan(
+        group_body, x, (p["groups"], grouped, cache["layers"]))
+    ntail = tail_st
+    if tail:
+        x, ntail = jax.lax.scan(mamba_body, x, (p["tail"], tail_st))
+    new_fx = _ungroup_fixed(ngst, ntail, tail)
+    new_fixed = jax.tree.map(
+        lambda a, r: a.at[:, slots].set(r), fixed, new_fx)
+    idx = last_idx if last_idx is not None else jnp.full((b,), t - 1, jnp.int32)
+    x_last = x[jnp.arange(b), idx][:, None]
+    return _lm_head(p, x_last, cfg, backend)[:, 0], {"layers": npools}, new_fixed
 
 
 def lm_decode(

@@ -165,6 +165,59 @@ def mamba2_forward(
     return out, {"h": hlast, "conv_x": tail(x_raw), "conv_bc": tail(bc_raw)}
 
 
+def mamba2_prefill_chunk(
+    p: Dict[str, Any],
+    xin: jax.Array,          # [B,T,D] padded chunk
+    state: Dict[str, jax.Array],
+    lens: jax.Array,         # [B] valid tokens this chunk (rest is padding)
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunk of a state-carrying prefill: consume ``lens[b]`` tokens of
+    each row on top of ``state`` (SSD state + conv history from the previous
+    chunk, zeros on the first) and emit the boundary state for the next.
+
+    Numerics match :func:`mamba2_forward` exactly for a whole prompt fed as
+    one full-length chunk: the conv runs over ``[history, chunk]`` so each
+    output token sees its true K-1 predecessors, and padding beyond
+    ``lens[b]`` is neutralized by zeroing ``dt`` *after* softplus — decay
+    ``exp(dt·a) = 1`` and update ``x·dt = 0`` make every padded step a state
+    no-op, so the emitted state is the state after exactly ``lens[b]``
+    tokens regardless of the bucket's pad length.
+    """
+    d_inner, hp, nh, n = mamba_dims(cfg)
+    b_, t_, _ = xin.shape
+    km1 = cfg.conv_kernel - 1
+    z, x_raw, bc_raw, dt = _in_projections(p, xin, cfg, backend)
+    # conv over [K-1 history, chunk]; drop the history positions afterwards
+    stream_x = jnp.concatenate([state["conv_x"], x_raw], axis=1)
+    stream_bc = jnp.concatenate([state["conv_bc"], bc_raw], axis=1)
+    x = _causal_conv(stream_x, p["conv_x_w"], p["conv_x_b"])[:, km1:]
+    bc = _causal_conv(stream_bc, p["conv_bc_w"], p["conv_bc_b"])[:, km1:]
+    bm, cm = jnp.split(bc, [n], axis=-1)
+    valid = (jnp.arange(t_)[None, :] < lens[:, None])  # [B,T]
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.where(valid[:, :, None], dt, 0.0)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    la = dt * a
+    xh = x.reshape(b_, t_, nh, hp)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, hlast = ssd_chunked(xdt.astype(xin.dtype), la, bm, cm, h0=state["h"])
+    y = y + xh.astype(jnp.float32).astype(xin.dtype) * p["d_skip"][None, None, :, None].astype(xin.dtype)
+    y = y.reshape(b_, t_, d_inner)
+    y = L.apply_norm(p["norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    out = L.apply_linear(p["out_proj"], y, backend=backend)
+    # raw token t sits at stream index K-1+t, so the K-1 tokens ending each
+    # row's valid region are stream indices [lens, lens+K-2] — for lens=0
+    # that window is exactly the incoming history (state unchanged)
+    idx = lens[:, None] + jnp.arange(km1)[None, :]      # [B,K-1]
+    tail = lambda s: jnp.take_along_axis(s, idx[:, :, None], axis=1)
+    return out, {"h": hlast, "conv_x": tail(stream_x),
+                 "conv_bc": tail(stream_bc)}
+
+
 def mamba2_decode(
     p: Dict[str, Any],
     xin: jax.Array,          # [B,1,D]

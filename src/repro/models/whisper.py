@@ -239,3 +239,186 @@ def whisper_decode(
     x = L.apply_norm(p["dec"]["final_norm"], x)
     logits = L.logits_from_embedding(p["dec"]["embed"], x)[:, 0]
     return logits, {"layers": layers}
+
+
+# ------------------------------------------------------------ paged serve ---
+def sinusoid_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embeddings at arbitrary per-row positions ``[B, T] ->
+    [B, T, d]`` (same formula as :func:`sinusoid`, vectorized for chunked
+    prefill where each slot sits at a different ``start_len``)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    inv = jnp.exp(-dim * jnp.log(10000.0) / d)
+    ang = pos * inv[None, None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_whisper_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged decode cache: per-decoder-layer self-attention KV pools plus a
+    read-only encoder page pool holding each request's cross-attention K/V
+    (computed once at admission, shared across requests via the exact-match
+    encoder cache).  Encoder pages stay at model dtype — they are written
+    once and never rescattered, so ``kv_quant`` applies only to the
+    self-attention pools.  Page 0 of every pool is the trash page; zero
+    rows are softmax-safe because decode masks them via ``enc_len``."""
+    pools = [A.init_gqa_page_pool(cfg, num_pages, page_size)
+             for _ in range(cfg.num_layers)]
+    hkv, dh = cfg.num_kv_heads, cfg.hdim
+    eshp = (cfg.num_layers, num_pages, page_size, hkv, dh)
+    return {
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *pools),
+        "enc": {
+            "xk": jnp.zeros(eshp, cfg.jdtype),
+            "xv": jnp.zeros(eshp, cfg.jdtype),
+        },
+    }
+
+
+def whisper_enc_kv(p, frames: jax.Array, cfg: ModelConfig, *, backend="auto"):
+    """Run the encoder once and project per-decoder-layer cross K/V.
+
+    Returns ``{"xk"/"xv": [L_dec, B, T_enc, Hkv, Dh]}`` — the rows the
+    engine scatters into the encoder page pool at admission."""
+    enc_out = encode(p, frames, cfg, backend=backend)
+    b, s, _ = enc_out.shape
+    hkv, dh = cfg.num_kv_heads, cfg.hdim
+
+    def body(carry, lp):
+        xk = L.apply_linear(lp["cross_attn"]["wk"], enc_out, backend=backend)
+        xv = L.apply_linear(lp["cross_attn"]["wv"], enc_out, backend=backend)
+        return carry, (xk.reshape(b, s, hkv, dh), xv.reshape(b, s, hkv, dh))
+
+    _, (xk, xv) = jax.lax.scan(body, 0, p["dec"]["layers"])
+    return {"xk": xk, "xv": xv}
+
+
+def _gather_enc(exk, exv, enc_table, enc_len):
+    """Gather a slot's encoder rows from the page pool back into logical
+    order.  ``enc_len`` is clamped to >= 1 so rows whose slots hold no
+    encoder pages (trash table) still see one valid (zero) row — masked
+    softmax stays finite."""
+    b, pe = enc_table.shape
+    ps = exk.shape[1]
+    s = pe * ps
+    hkv, dh = exk.shape[-2], exk.shape[-1]
+    xk = exk[enc_table].reshape(b, s, hkv, dh)
+    xv = exv[enc_table].reshape(b, s, hkv, dh)
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < jnp.maximum(enc_len, 1)[:, None]
+    return xk, xv, valid
+
+
+def whisper_decode_paged(
+    p,
+    token: jax.Array,             # [B, 1] int32
+    cache,                        # pools from init_whisper_paged_cache
+    position: jax.Array,          # [B] int32 decoder position
+    table_rows: jax.Array,        # [B, P] int32 self-attn page table
+    enc_table: jax.Array,         # [B, Pe] int32 encoder page table
+    enc_len: jax.Array,           # [B] int32 valid encoder rows
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+):
+    """One decode step against paged self-attn pools + read-only encoder
+    pages.  Replicates the contiguous :func:`whisper_decode` numerics,
+    including its position-0 sinusoid quirk on the decode embedding.
+    Returns (logits, new pools) — the enc pool rides through untouched."""
+    b = token.shape[0]
+    x = L.apply_embedding(p["dec"]["embed"], token)
+    x = x + sinusoid(1, cfg.d_model, offset=0).astype(x.dtype)[None]
+    pos = position[:, None]
+    h_, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+    grp = h_ // hkv
+
+    def body(x, inp):
+        lp, pool, exk, exv = inp
+        h = L.apply_norm(lp["norm1"], x)
+        y, pool = A.gqa_decode_paged(
+            lp["self_attn"], h, pos, pool, table_rows, position, cfg,
+            backend=backend)
+        x = x + y
+        h = L.apply_norm(lp["norm2"], x)
+        xk, xv, valid = _gather_enc(exk, exv, enc_table, enc_len)
+        q = L.apply_linear(lp["cross_attn"]["wq"], h, backend=backend).reshape(
+            b, hkv, grp, dh)
+        sc = jnp.einsum(
+            "bhgd,bshd->bhgs", q.astype(jnp.float32), xk.astype(jnp.float32)
+        ) * dh**-0.5
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        attn = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", attn, xv.astype(jnp.float32))
+        o = L.apply_linear(
+            lp["cross_attn"]["wo"], o.reshape(b, 1, h_ * dh).astype(x.dtype),
+            backend=backend,
+        )
+        x = x + o
+        h = L.apply_norm(lp["norm3"], x)
+        x = x + M.apply_mlp(lp["mlp"], h, backend=backend)
+        return x, pool
+
+    x, npools = jax.lax.scan(
+        body, x,
+        (p["dec"]["layers"], cache["layers"],
+         cache["enc"]["xk"], cache["enc"]["xv"]))
+    x = L.apply_norm(p["dec"]["final_norm"], x)
+    logits = L.logits_from_embedding(p["dec"]["embed"], x)[:, 0]
+    return logits, {"layers": npools, "enc": cache["enc"]}
+
+
+def whisper_prefill_chunk(
+    p,
+    tokens: jax.Array,            # [B, T] int32 chunk tokens (right-padded)
+    cache,                        # pools from init_whisper_paged_cache
+    start_len: jax.Array,         # [B] int32 tokens already in the pages
+    chunk_len: jax.Array,         # [B] int32 valid rows of this chunk
+    table_rows: jax.Array,        # [B, P] int32 self-attn page table
+    enc_table: jax.Array,         # [B, Pe] int32 encoder page table
+    enc_len: jax.Array,           # [B] int32 valid encoder rows
+    cfg: ModelConfig,
+    *,
+    backend: str = "auto",
+    last_idx=None,
+):
+    """Chunked decoder prefill against the paged pools: self-attn KV is
+    scattered into the slot's pages (same contract as
+    :func:`repro.models.attention.gqa_prefill_chunk`), cross attention
+    reads the slot's read-only encoder pages.  Prompt tokens use true
+    sinusoidal positions ``start_len + t`` (matching
+    :func:`whisper_prefill`); the decode-side position-0 quirk only
+    applies to generated tokens.  Returns (last-chunk-token logits,
+    pools)."""
+    b, t = tokens.shape
+    positions = start_len[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    x = L.apply_embedding(p["dec"]["embed"], tokens)
+    x = x + sinusoid_at(positions, cfg.d_model).astype(x.dtype)
+    h_, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hdim
+
+    def body(x, inp):
+        lp, pool, exk, exv = inp
+        h = L.apply_norm(lp["norm1"], x)
+        y, pool = A.gqa_prefill_chunk(
+            lp["self_attn"], h, pool, table_rows, start_len, chunk_len, cfg,
+            backend=backend)
+        x = x + y
+        h = L.apply_norm(lp["norm2"], x)
+        xk, xv, valid = _gather_enc(exk, exv, enc_table, enc_len)
+        q = L.apply_linear(lp["cross_attn"]["wq"], h, backend=backend).reshape(
+            b, t, h_, dh)
+        qp = jnp.zeros((b, t), jnp.int32)
+        kp = jnp.zeros((b, xk.shape[1]), jnp.int32)
+        o = A.chunked_attention(q, xk, xv, qp, kp, valid, causal=False)
+        x = x + L.apply_linear(
+            lp["cross_attn"]["wo"], o.reshape(b, t, -1), backend=backend)
+        h = L.apply_norm(lp["norm3"], x)
+        x = x + M.apply_mlp(lp["mlp"], h, backend=backend)
+        return x, pool
+
+    x, npools = jax.lax.scan(
+        body, x,
+        (p["dec"]["layers"], cache["layers"],
+         cache["enc"]["xk"], cache["enc"]["xv"]))
+    x = L.apply_norm(p["dec"]["final_norm"], x)
+    idx = last_idx if last_idx is not None else jnp.full((b,), t - 1, jnp.int32)
+    x_last = x[jnp.arange(b), idx][:, None]
+    logits = L.logits_from_embedding(p["dec"]["embed"], x_last)[:, 0]
+    return logits, {"layers": npools, "enc": cache["enc"]}

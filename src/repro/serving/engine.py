@@ -55,6 +55,27 @@ from a fixed-slot continuous batcher backed by a **paged KV cache**:
   through the pools, so under ``kv_quant`` its logits match the cold run's
   only to within int8 quantization error, exactly like paged decode steps
   already do).
+
+**State leaves** (``api.state_leaves``): a slot's device state is one or
+more typed leaves, and every lifecycle primitive (admit, grow, preempt,
+swap, resume, free) handles each kind by its own invariants:
+
+- ``kv_pages`` — the paged attention pools above (every config has them;
+  hybrid configs page only their shared-attention applications);
+- ``fixed_rows`` — per-layer recurrent state rows ``[M, B, ...]`` for
+  hybrid SSM configs (zamba2): O(1) per slot, never paged, zeroed at
+  admission, round-tripped bit-exactly through the host swap buffer next
+  to the KV rows under one combined CRC-32;
+- ``shared_ro`` — read-only encoder K/V pages for enc-dec configs
+  (whisper): allocated once per request in the pager's ``"enc"`` page
+  group, deduplicated across requests by an exact-match (whole-sequence)
+  prefix-cache index, never host-swapped — preemption detaches them under
+  swap holds and resume reattaches.
+
+The *token* prefix cache stays attention-only: KV pages cannot capture an
+SSM boundary state and cross-attention depends on the encoder input, so
+hybrid/enc-dec engines reject ``prefix_cache=True`` with a clear error
+(enc-dec reuses the machinery for encoder pages instead).
 """
 from __future__ import annotations
 
@@ -90,6 +111,14 @@ FINISH_REASONS = ("completed", "length", "deadline", "cancelled", "rejected",
                   "failed")
 
 
+class UnsupportedModelError(NotImplementedError):
+    """Raised at :class:`ServingEngine` construction for a config whose
+    mixer/family has no paged serving path (e.g. a pure-RNN family with no
+    fixed-rows adapter).  Subclasses :class:`NotImplementedError` so older
+    callers that caught that still work; the point is failing *at engine
+    build* with the reason, never mid-step with an ``AttributeError``."""
+
+
 class RejectedRequest(ValueError):
     """Raised by :meth:`ServingEngine.submit` for *invalid* requests (empty
     prompt, non-positive ``max_tokens``, over-long prompt).  The request is
@@ -110,6 +139,7 @@ class Request:
     arrival_t: float = 0.0
     deadline_s: Optional[float] = None       # total wall budget from arrival
     ttft_deadline_s: Optional[float] = None  # first-token budget from arrival
+    frames: Optional[np.ndarray] = None      # [T_enc, d_model] (enc-dec only)
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     first_token_t: Optional[float] = None
@@ -131,7 +161,11 @@ class _SwapState:
     """Host-side image of a preempted slot: everything needed to resume it
     bit-exactly without re-prefilling.  Shared/cached pages are *not* part of
     the image — they stay resident in the pool under a swap hold and resume
-    re-acquires them (``kept``); only private pages round-trip as rows."""
+    re-acquires them (``kept``); only private pages round-trip as rows.
+    Fixed-rows slots (hybrid SSM) additionally carry their per-layer state
+    rows in the same image (one combined checksum); enc-dec slots carry no
+    encoder bytes at all — their read-only pages stay resident under swap
+    holds (``enc_pages``) and resume reattaches them."""
     rows: Any                     # pytree [L, n_private, PS, ...] (or None)
     kept: List[Tuple[int, int]]   # (logical_idx, page) left resident
     private_lis: List[int]        # logical idxs of the swapped rows
@@ -140,6 +174,9 @@ class _SwapState:
     nbytes: int                   # swap buffer size (stats)
     on_host: bool = False         # rows materialized to numpy (device freed)
     checksum: Optional[int] = None  # CRC-32 of the host image (drain time)
+    fixed_rows: Any = None        # pytree [M, 1, ...] SSM state (or None)
+    enc_pages: Optional[List[int]] = None  # detached read-only enc pages
+    enc_len: int = 0              # valid encoder rows to restore
     corrupted: bool = False       # injected rot already applied (flip once —
                                   # a second XOR would flip the byte *back*)
 
@@ -156,6 +193,9 @@ class EngineStats:
     grown_pages: int = 0          # pages added by lazy decode growth
     swapped_out_bytes: int = 0    # pool bytes copied device -> host
     swapped_in_bytes: int = 0     # pool bytes copied host -> device
+    swapped_fixed_bytes: int = 0  # of swapped_out: fixed-rows state bytes
+    enc_hits: int = 0             # admissions reusing cached encoder pages
+    enc_encodes: int = 0          # admissions that ran the encoder
     idle_steps: int = 0           # drain iterations with nothing decodable
     max_active: int = 0           # peak concurrent decoding slots
     active_slot_steps: int = 0    # sum of active slots over steps (mean = /steps)
@@ -200,7 +240,7 @@ class ServingEngine:
     ):
         ok, why = api.paged_supported(cfg)
         if not ok:
-            raise NotImplementedError(f"paged serving: {why}")
+            raise UnsupportedModelError(f"paged serving: {why}")
         if cfg.act_quant not in ("a16", "a8_prefill"):
             raise ValueError(
                 f"act_quant={cfg.act_quant!r}: expected 'a16' or 'a8_prefill' "
@@ -216,20 +256,46 @@ class ServingEngine:
         self.backend = backend
         self.key = jax.random.PRNGKey(seed)
 
-        # +1: page 0 is the pager's trash page, never handed to a slot
-        num_pages = num_pages or (batch_size * self.P + 1)
-        if num_pages - 1 < self.P:
+        # which typed state leaves a slot of this config owns — every
+        # lifecycle primitive below branches on these, nothing else does
+        self.leaves = api.state_leaves(cfg)
+        self.has_fixed = api.FIXED_ROWS in self.leaves
+        self.has_enc = api.SHARED_RO in self.leaves
+
+        # +1: page 0 is the pager's trash page, never handed to a slot.
+        # Enc-dec slots additionally page their encoder K/V ("enc" group),
+        # so the default pool and the one-request floor both double.
+        slot_pages = self.P * (2 if self.has_enc else 1)
+        num_pages = num_pages or (batch_size * slot_pages + 1)
+        if num_pages - 1 < slot_pages:
             # one max-size request must always be admittable once the pool
             # drains, or run_until_drained could spin on an empty batch
             raise ValueError(
                 f"num_pages={num_pages} cannot hold one max_seq request "
-                f"({self.P} pages of {page_size} tokens + trash page)")
-        self.pager = KV.PagePool(num_pages, page_size, batch_size, self.P)
+                f"({slot_pages} pages of {page_size} tokens + trash page)")
+        groups = ("kv", "enc") if self.has_enc else ("kv",)
+        self.pager = KV.PagePool(num_pages, page_size, batch_size, self.P,
+                                 groups=groups)
+        if prefix_cache and (self.has_fixed or self.has_enc):
+            raise ValueError(
+                "prefix_cache=True is attention-only: KV pages cannot "
+                "capture an SSM boundary state (hybrid) and cross-attention "
+                "depends on the encoder input (enc-dec); enc-dec engines "
+                "deduplicate encoder pages automatically instead")
         self.cache: Optional[PrefixCache] = (
             PrefixCache(self.pager, page_size,
                         mode=f"kvq={int(bool(cfg.kv_quant))}")
             if prefix_cache else None)
+        # exact-match index over read-only encoder pages (same machinery,
+        # whole-sequence keys): identical frames across requests share one
+        # resident page set.  Registers as the pool's (only) evictor.
+        self.enc_cache: Optional[PrefixCache] = (
+            PrefixCache(self.pager, page_size, mode="enc")
+            if self.has_enc else None)
         self.pools = api.init_paged_cache(cfg, num_pages, page_size)
+        self.fixed = (api.init_fixed_state(cfg, batch_size)
+                      if self.has_fixed else None)
+        self.enc_len = np.zeros(batch_size, np.int32)   # valid enc rows/slot
         self.reservation = reservation
         self.sched = Scheduler(page_size=page_size, max_seq=self.S,
                                max_prefill_tokens=max_prefill_tokens,
@@ -261,19 +327,44 @@ class ServingEngine:
         self.pager.faults = fault_plan
         if self.cache is not None:
             self.cache.faults = fault_plan
+        if self.enc_cache is not None:
+            self.enc_cache.faults = fault_plan
         self._clock = time.perf_counter     # swappable in tests (deadlines)
         self._step_idx = 0                  # all engine steps (idle included)
         self._retry_pending = False         # last step skipped work on a fault
 
         # donate the pools: the step's output cache aliases the input buffers
-        # instead of allocating a second full pool every decoded token
-        self._decode = jax.jit(
-            lambda p, c, tok, pos, table: api.decode_paged_fn(
-                p, {"token": tok, "position": pos}, c, table, cfg,
-                backend=backend
-            ),
-            donate_argnums=(1,),
-        )
+        # instead of allocating a second full pool every decoded token.
+        # The launch signature follows the config's state leaves — hybrid
+        # threads the fixed-rows tree (donated too) plus an active mask,
+        # enc-dec threads the encoder page table + valid lengths.
+        if self.has_fixed:
+            self._decode = jax.jit(
+                lambda p, c, fixed, tok, pos, table, active:
+                    api.decode_paged_fn(
+                        p, {"token": tok, "position": pos}, c, table, cfg,
+                        backend=backend, fixed=fixed, active=active),
+                donate_argnums=(1, 2),
+            )
+        elif self.has_enc:
+            self._decode = jax.jit(
+                lambda p, c, tok, pos, table, enc_table, enc_len:
+                    api.decode_paged_fn(
+                        p, {"token": tok, "position": pos}, c, table, cfg,
+                        backend=backend, enc_table=enc_table,
+                        enc_len=enc_len),
+                donate_argnums=(1,),
+            )
+            self._encode = jax.jit(
+                lambda p, fr: api.encode_kv_fn(p, fr, cfg, backend=backend))
+        else:
+            self._decode = jax.jit(
+                lambda p, c, tok, pos, table: api.decode_paged_fn(
+                    p, {"token": tok, "position": pos}, c, table, cfg,
+                    backend=backend
+                ),
+                donate_argnums=(1,),
+            )
         # joint length-bucketed chunk prefill: each row is one [blen] prompt
         # chunk at logical positions start_len[r] + t; KV scatters into the
         # pages and attention reads every earlier token (cached prefix and
@@ -281,14 +372,42 @@ class ServingEngine:
         # (n, bucket_len); the scheduler's power-of-two buckets keep that
         # trace count O(log max_seq).  Pools donated: the chunk's output
         # cache aliases the input buffers.
-        self._prefill_chunk = jax.jit(
-            lambda p, toks, last_idx, starts, lens, table, pools:
-                api.prefill_chunk_fn(
-                    p, {"tokens": toks}, pools, table, starts, lens, cfg,
-                    backend=backend, last_idx=last_idx
-                ),
-            donate_argnums=(6,),
-        )
+        if self.has_fixed:
+            self._prefill_chunk = jax.jit(
+                lambda p, toks, last_idx, starts, lens, table, pools, fixed,
+                       slots:
+                    api.prefill_chunk_fn(
+                        p, {"tokens": toks}, pools, table, starts, lens, cfg,
+                        backend=backend, last_idx=last_idx, fixed=fixed,
+                        slots=slots),
+                donate_argnums=(6, 7),
+            )
+            # fresh admission starts from zero SSM state (the previous
+            # occupant's rows are stale, not trash-maskable like KV pages)
+            self._fixed_zero = jax.jit(
+                lambda f, slot: jax.tree.map(
+                    lambda a: a.at[:, slot].set(0), f),
+                donate_argnums=(0,),
+            )
+        elif self.has_enc:
+            self._prefill_chunk = jax.jit(
+                lambda p, toks, last_idx, starts, lens, table, pools,
+                       enc_table, enc_len:
+                    api.prefill_chunk_fn(
+                        p, {"tokens": toks}, pools, table, starts, lens, cfg,
+                        backend=backend, last_idx=last_idx,
+                        enc_table=enc_table, enc_len=enc_len),
+                donate_argnums=(6,),
+            )
+        else:
+            self._prefill_chunk = jax.jit(
+                lambda p, toks, last_idx, starts, lens, table, pools:
+                    api.prefill_chunk_fn(
+                        p, {"tokens": toks}, pools, table, starts, lens, cfg,
+                        backend=backend, last_idx=last_idx
+                    ),
+                donate_argnums=(6,),
+            )
         self._sample = jax.jit(sample_per_slot)
 
     # ------------------------------------------------------------- admin ---
@@ -324,6 +443,25 @@ class ServingEngine:
             return self._reject(
                 req, f"prompt of {len(req.prompt)} tokens exceeds "
                      f"max_seq-1={self.S - 1}", raise_=True)
+        if self.has_enc:
+            if req.frames is None:
+                return self._reject(
+                    req, "enc-dec config: request must carry encoder frames",
+                    raise_=True)
+            fr = np.asarray(req.frames)
+            if fr.ndim != 2 or fr.shape[0] < 1 \
+                    or fr.shape[1] != self.cfg.d_model:
+                return self._reject(
+                    req, f"frames must be [T_enc>=1, {self.cfg.d_model}], "
+                         f"got {fr.shape}", raise_=True)
+            if fr.shape[0] > self.S:
+                return self._reject(
+                    req, f"{fr.shape[0]} encoder frames exceed the "
+                         f"{self.S}-row page budget", raise_=True)
+            req.frames = fr
+        elif req.frames is not None:
+            return self._reject(
+                req, "frames on a decoder-only config", raise_=True)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             return self._reject(
                 req, f"queue full ({self.max_queue} waiting)", raise_=False)
@@ -361,6 +499,8 @@ class ServingEngine:
         if st is not None:
             for _, p in st.kept:
                 self.pager.drop_hold(p)
+            if st.enc_pages:
+                self.pager.drop_group_holds(st.enc_pages)
         req.finish_reason = reason
         req.error = error
         req.done_t = self._clock()
@@ -378,6 +518,7 @@ class ServingEngine:
         self.pos[slot] = 0
         self.last_tok[slot] = 0
         self.pref_target[slot] = 0
+        self.enc_len[slot] = 0
         self.pager.free_slot(slot)
         self._finish_abnormal(req, reason, error)
 
@@ -449,6 +590,19 @@ class ServingEngine:
             hashes=hashes)
 
     # ---------------------------------------------------- swap-out / -in ---
+    def _kv_pools(self):
+        """The KV-pages subtree of the device pools — what page-granular
+        swap gathers/scatters.  Enc-dec pools also hold the read-only
+        encoder pool, which must never ride a KV swap image (its pages are
+        detached/reattached, the data never moves)."""
+        return self.pools["layers"] if self.has_enc else self.pools
+
+    def _set_kv_pools(self, new) -> None:
+        if self.has_enc:
+            self.pools = {**self.pools, "layers": new}
+        else:
+            self.pools = new
+
     def _preempt(self, slot: int) -> None:
         """Swap ``slot`` out and requeue its request at the queue *head* (it
         was admitted before anything still queued, so FCFS order is
@@ -461,29 +615,48 @@ class ServingEngine:
         effect.  The device→host copy is kicked off asynchronously and
         overlaps the following decode step, after which the rows are
         materialized to host and the device-side gather buffer dropped
-        (:meth:`_drain_swap_buffers`)."""
+        (:meth:`_drain_swap_buffers`).
+
+        Non-KV leaves ride the same preemption: a hybrid slot's fixed-rows
+        state is gathered into the image next to the KV rows (same async
+        copy, one combined checksum); an enc-dec slot's read-only encoder
+        pages never leave the device — they detach under swap holds and
+        resume reattaches them."""
         req = self.slots[slot]
         kept, private = self.pager.split_for_swap(slot)
         rows, nbytes = None, 0
         if private:
             rows = api.gather_pool_rows(
-                self.pools,
+                self._kv_pools(),
                 jnp.asarray([p for _, p in private], jnp.int32))
             # start the device->host transfer without blocking the step loop
             jax.tree.map(lambda a: a.copy_to_host_async(), rows)
             nbytes = sum(a.nbytes for a in jax.tree.leaves(rows))
+        frows, fbytes = None, 0
+        if self.has_fixed:
+            frows = api.gather_pool_rows(
+                self.fixed, jnp.asarray([slot], jnp.int32))
+            jax.tree.map(lambda a: a.copy_to_host_async(), frows)
+            fbytes = sum(a.nbytes for a in jax.tree.leaves(frows))
+        enc_pages, enc_len = None, 0
+        if self.has_enc:
+            enc_pages = self.pager.detach_group(slot, "enc")
+            enc_len = int(self.enc_len[slot])
+            self.enc_len[slot] = 0
         self.pager.swap_out(slot, (kept, private))
         self._swapped[req.submit_seq] = _SwapState(
             rows=rows, kept=kept, private_lis=[li for li, _ in private],
             pos=int(self.pos[slot]), last_tok=int(self.last_tok[slot]),
-            nbytes=nbytes)
+            nbytes=nbytes + fbytes, fixed_rows=frows,
+            enc_pages=enc_pages, enc_len=enc_len)
         self.queue.appendleft(req)
         self.slots[slot] = None
         self.pos[slot] = 0
         self.last_tok[slot] = 0
         self.pref_target[slot] = 0
         self.stats.preemptions += 1
-        self.stats.swapped_out_bytes += nbytes
+        self.stats.swapped_out_bytes += nbytes + fbytes
+        self.stats.swapped_fixed_bytes += fbytes
 
     def _resume(self, slot: int, req: Request) -> None:
         """Swap a preempted request back in: re-acquire its held shared
@@ -493,8 +666,17 @@ class ServingEngine:
         fresh = self.pager.swap_in(slot, st.kept, st.private_lis)
         if st.rows is not None:
             rows = jax.device_get(st.rows)     # no-op once drained to host
-            self.pools = api.scatter_pool_rows(
-                self.pools, rows, jnp.asarray(fresh, jnp.int32))
+            self._set_kv_pools(api.scatter_pool_rows(
+                self._kv_pools(), rows, jnp.asarray(fresh, jnp.int32)))
+        if st.fixed_rows is not None:
+            # same dtypes both ways (f32 h, model-dtype conv tails), so the
+            # restored recurrent state is bit-identical to the preempted one
+            self.fixed = api.scatter_pool_rows(
+                self.fixed, jax.device_get(st.fixed_rows),
+                jnp.asarray([slot], jnp.int32))
+        if st.enc_pages is not None:
+            self.pager.reattach_group(slot, "enc", st.enc_pages)
+            self.enc_len[slot] = st.enc_len
         self.slots[slot] = req
         self.pos[slot] = st.pos
         self.last_tok[slot] = st.last_tok
@@ -558,13 +740,23 @@ class ServingEngine:
         the restored last token — degraded (recompute) but never poisoned.
         Returns False when the request must not resume by swap-in."""
         st = self._swapped[req.submit_seq]
-        if (st.rows is None or not st.on_host or st.checksum is None
-                or api.swap_image_checksum(st.rows) == st.checksum):
+        has_img = st.rows is not None or st.fixed_rows is not None
+        if (not has_img or not st.on_host or st.checksum is None
+                or api.swap_image_checksum(
+                    {"kv": st.rows, "fixed": st.fixed_rows}) == st.checksum):
             return True
-        # poisoned host buffer detected — never scatter it
+        # poisoned host buffer detected — never scatter it (KV rows and
+        # fixed state rows alike; the SSM state re-derives from the token
+        # replay exactly like the KV pages do)
         self._swapped.pop(req.submit_seq)
         for _, p in st.kept:
             self.pager.drop_hold(p)
+        if st.enc_pages:
+            # the detached encoder pages are clean (they never entered the
+            # host image) and stay indexed — dropping the holds makes them
+            # evictable, and the re-admission's exact-match lookup normally
+            # re-attaches them without re-encoding
+            self.pager.drop_group_holds(st.enc_pages)
         req.reprefills += 1
         self.stats.retries += 1
         self._retry_pending = True
@@ -642,6 +834,13 @@ class ServingEngine:
                 self.pos[slot] = int(pfx[r])
                 self.pref_target[slot] = len(req.prompt)
                 self.last_tok[slot] = 0
+                if self.has_fixed:
+                    # the previous occupant's recurrent state is stale, not
+                    # trash-maskable like KV pages — zero it before chunk 1
+                    self.fixed = self._fixed_zero(
+                        self.fixed, jnp.asarray(slot, jnp.int32))
+                if self.has_enc:
+                    self._admit_enc(slot, req)
                 self.stats.admitted += 1
                 self.stats.prefix_matched_tokens += int(pfx[r])
                 self.stats.prefix_hits += int(pfx[r] > 0)
@@ -666,6 +865,44 @@ class ServingEngine:
                             key=lambda r: r.submit_seq)
             self.queue.clear()
             self.queue.extend(merged)
+
+    def _admit_enc(self, slot: int, req: Request) -> None:
+        """Fill ``slot``'s encoder pages at admission: the scheduler already
+        grew the fresh page set ("enc" group, charged in its plan), so
+        either an exact-match cache hit swaps them for the shared resident
+        copy (free fresh, attach cached — the conservative charge is
+        returned here), or the encoder runs once and its K/V rows scatter
+        into the fresh pages, which are then indexed for the next request
+        with identical frames."""
+        fr = req.frames
+        npg = self.pager.pages_needed(len(fr))
+        hashes = getattr(req, "_enc_hashes", None)
+        if hashes is None:
+            hashes = self.enc_cache.data_hashes(fr, npg)
+            req._enc_hashes = hashes
+        cached = self.enc_cache.match_exact(hashes)
+        if cached:
+            self.pager.free_group(slot, "enc")
+            self.pager.attach(slot, cached, group="enc")
+            self.stats.enc_hits += 1
+            self.stats.pages_shared += len(cached)
+        else:
+            pages = self.pager.slot_pages(slot, "enc")
+            kv = self._encode(self.params,
+                              jnp.asarray(fr, self.cfg.jdtype)[None])
+            s = int(kv["xk"].shape[2])
+            pad = npg * self.PS - s
+            rows = jax.tree.map(
+                lambda a: jnp.pad(a[:, 0], ((0, 0), (0, pad), (0, 0),
+                                            (0, 0)))
+                             .reshape(a.shape[0], npg, self.PS,
+                                      a.shape[3], a.shape[4]),
+                kv)
+            self.pools = {**self.pools, "enc": api.scatter_pool_rows(
+                self.pools["enc"], rows, jnp.asarray(pages, jnp.int32))}
+            self.enc_cache.insert_exact(hashes, pages)
+            self.stats.enc_encodes += 1
+        self.enc_len[slot] = len(fr)
 
     def _prefill_chunks(self) -> int:
         """Advance every prefilling slot by its scheduled chunk: pack up to
@@ -697,9 +934,24 @@ class ServingEngine:
                 req = self.slots[slot]
                 toks[r, : lens[r]] = req.prompt[starts[r]: starts[r] + lens[r]]
             table = jnp.asarray(self.pager.table()[bkt.slots])
-            logits, self.pools = self._prefill_chunk(
-                self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
-                jnp.asarray(starts), jnp.asarray(lens), table, self.pools)
+            if self.has_fixed:
+                logits, self.pools, self.fixed = self._prefill_chunk(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
+                    jnp.asarray(starts), jnp.asarray(lens), table,
+                    self.pools, self.fixed,
+                    jnp.asarray(bkt.slots, jnp.int32))
+            elif self.has_enc:
+                logits, self.pools = self._prefill_chunk(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
+                    jnp.asarray(starts), jnp.asarray(lens), table,
+                    self.pools,
+                    jnp.asarray(self.pager.table("enc")[bkt.slots]),
+                    jnp.asarray(self.enc_len[list(bkt.slots)]))
+            else:
+                logits, self.pools = self._prefill_chunk(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens - 1),
+                    jnp.asarray(starts), jnp.asarray(lens), table,
+                    self.pools)
             finals = [self.slots[s] if f else None
                       for s, f in zip(bkt.slots, bkt.final)]
             if any(bkt.final):
@@ -791,7 +1043,9 @@ class ServingEngine:
                 [s is not None and i not in stalled
                  for i, s in enumerate(self.slots)],
                 refs=self.pager.refs(), held=self.pager.held(),
-                cached=self.pager.cached_mask())
+                cached=self.pager.cached_mask(),
+                aux_tables=tuple(self.pager.table(g)
+                                 for g in self.pager.groups if g != "kv"))
         except KV.PagerInvariantError as e:
             if self.strict or e.slot is None:
                 raise
@@ -824,7 +1078,30 @@ class ServingEngine:
         tok = jnp.asarray(tok_np[:, None])
         pos = jnp.asarray(pos_np)
         table = jnp.asarray(tbl_np)
-        logits, self.pools = self._decode(self.params, self.pools, tok, pos, table)
+        if self.has_fixed:
+            # trash-masking covers the KV write but not the recurrence: an
+            # explicit active mask freezes non-decoding rows' fixed state
+            act = np.zeros(self.B, bool)
+            act[list(dset)] = True
+            logits, self.pools, self.fixed = self._decode(
+                self.params, self.pools, self.fixed, tok, pos, table,
+                jnp.asarray(act))
+        elif self.has_enc:
+            # non-decoding rows read the trash page's zero rows with a
+            # zero valid length (clamped to one masked row inside the
+            # model) — their logits are discarded like empty slots'
+            etbl = self.pager.table("enc").copy()
+            elen = self.enc_len.copy()
+            for i in range(self.B):
+                if i not in dset:
+                    etbl[i] = KV.TRASH_PAGE
+                    elen[i] = 0
+            logits, self.pools = self._decode(
+                self.params, self.pools, tok, pos, table,
+                jnp.asarray(etbl), jnp.asarray(elen))
+        else:
+            logits, self.pools = self._decode(
+                self.params, self.pools, tok, pos, table)
         self.key, sk = jax.random.split(self.key)
         rows = [self.slots[i] if i in dset else None for i in range(self.B)]
         temps = jnp.asarray([
@@ -860,6 +1137,7 @@ class ServingEngine:
                 self.pos[i] = 0
                 self.last_tok[i] = 0
                 self.pref_target[i] = 0
+                self.enc_len[i] = 0
                 self.pager.free_slot(i)
         return len(dec) + chunked
 
@@ -875,31 +1153,58 @@ class ServingEngine:
         (resume then device_gets it directly — correct, just not yet freed);
         ``swap_corrupt`` flips a byte of a drained image *after* its CRC-32
         was recorded, modelling host-buffer rot — the mismatch is caught at
-        swap-in (:meth:`_verify_swap_image`) and the victim re-prefills."""
+        swap-in (:meth:`_verify_swap_image`) and the victim re-prefills.
+        ``fixed_drain`` is the fixed-rows twin of ``swap_drain``: it only
+        targets images carrying SSM state rows, so hybrid-specific
+        resume-before-drain runs don't perturb the attention-only chaos
+        suites' probe sequences."""
         for st in self._swapped.values():
-            if st.rows is not None and not st.on_host:
-                if (self.faults is not None
-                        and self.faults.fires("swap_drain")):
+            has_img = st.rows is not None or st.fixed_rows is not None
+            if has_img and not st.on_host:
+                site = "fixed_drain" if st.fixed_rows is not None \
+                    else "swap_drain"
+                if self.faults is not None and self.faults.fires(site):
                     continue                    # transfer "still in flight"
-                st.rows = jax.device_get(st.rows)
+                if st.rows is not None:
+                    st.rows = jax.device_get(st.rows)
+                if st.fixed_rows is not None:
+                    st.fixed_rows = jax.device_get(st.fixed_rows)
                 st.on_host = True
-                st.checksum = api.swap_image_checksum(st.rows)
-            if (st.on_host and st.rows is not None and not st.corrupted
+                st.checksum = api.swap_image_checksum(
+                    {"kv": st.rows, "fixed": st.fixed_rows})
+            if (st.on_host and has_img and not st.corrupted
                     and self.faults is not None
                     and self.faults.fires("swap_corrupt")):
-                st.rows = corrupt_host_image(st.rows)
+                img = corrupt_host_image(
+                    {"kv": st.rows, "fixed": st.fixed_rows})
+                st.rows, st.fixed_rows = img["kv"], img["fixed"]
                 st.corrupted = True
 
+    def _deadline_left(self, r: Request, now: float) -> str:
+        """Tightest remaining deadline of ``r`` as text: negative means
+        already past due (the expiry sweep will catch it next step); ``-``
+        when the request carries no deadline at all."""
+        rem = []
+        age = now - r.arrival_t
+        if r.deadline_s is not None:
+            rem.append(r.deadline_s - age)
+        if r.ttft_deadline_s is not None and r.first_token_t is None:
+            rem.append(r.ttft_deadline_s - age)
+        return f"{min(rem):.3f}s" if rem else "-"
+
     def _pending_report(self) -> str:
-        """Every unfinished request — uid, phase, progress — plus pager
+        """Every unfinished request — uid, phase (queued / swapped /
+        prefilling / decoding), progress, remaining deadline — plus pager
         occupancy, for the stall / max_steps raises: the operator sees the
         full stuck set, not just the queue head."""
         lines = []
+        now = self._clock()
         for r in self.queue:
             phase = ("swapped" if r.submit_seq in self._swapped else "queued")
             lines.append(
                 f"  uid={r.uid} phase={phase} prompt={len(r.prompt)} "
-                f"out={len(r.output)}/{r.max_tokens} retries={r.retries}")
+                f"out={len(r.output)}/{r.max_tokens} retries={r.retries} "
+                f"deadline={self._deadline_left(r, now)}")
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
@@ -907,7 +1212,8 @@ class ServingEngine:
                      else "decoding")
             lines.append(
                 f"  uid={r.uid} phase={phase} slot={i} pos={int(self.pos[i])} "
-                f"out={len(r.output)}/{r.max_tokens} retries={r.retries}")
+                f"out={len(r.output)}/{r.max_tokens} retries={r.retries} "
+                f"deadline={self._deadline_left(r, now)}")
         lines.append(
             f"  pager: free={self.pager.free_pages}/"
             f"{self.pager.num_pages - 1} "

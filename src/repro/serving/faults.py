@@ -31,6 +31,14 @@ Injection sites (see the component that probes each):
                     :class:`SimulatedDeviceError` before dispatch (state
                     untouched; the step retries, budget-bounded)
 ``prefill_launch``  same for the chunk-prefill launch
+``fixed_drain``     ``_drain_swap_buffers`` leaves a fixed-rows-bearing swap
+                    image "in flight" this step (the SSM-state twin of
+                    ``swap_drain`` — exercises resume-before-drain for
+                    hybrid slots whose image carries state rows)
+``enc_evict``       ``PrefixCache.match_exact`` force-evicts the matched
+                    read-only encoder pages and reports a miss (the
+                    admission re-encodes; the enc-page twin of
+                    ``prefix_evict``)
 ==================  =========================================================
 
 Every probe is a cheap no-op when no plan is installed (a single ``is None``
@@ -50,7 +58,8 @@ import numpy as np
 
 SITES = (
     "page_alloc", "page_grow", "pool_pressure", "swap_drain", "swap_corrupt",
-    "prefix_evict", "decode_launch", "prefill_launch",
+    "prefix_evict", "decode_launch", "prefill_launch", "fixed_drain",
+    "enc_evict",
 )
 
 

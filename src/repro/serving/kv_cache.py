@@ -24,6 +24,17 @@ when an allocation would otherwise fail.  ``cow`` gives a slot a private
 copy of a shared page before it writes into it (copy-on-write), and
 ``swap_out``/``swap_in`` keep shared pages resident across preemption (they
 are never swapped to host with a victim — resume re-acquires them).
+
+**Page groups (state-leaf kinds)**: the pool can serve several *groups* of
+per-slot page tables over one shared free list / refcount space — ``"kv"``
+(the default: read-write paged KV, everything above) plus read-only groups
+like ``"enc"`` (whisper encoder K/V pages, written once at admission and
+shared via the prefix-cache refcount machinery).  Every page id is owned by
+at most one group at a time; read-only groups never grow during decode,
+never take COWs, and survive preemption as holds
+(:meth:`detach_group` / :meth:`reattach_group`) instead of host swaps.
+Fixed-rows state (SSM) is *not* paged at all — it lives in per-slot device
+rows owned by the engine; the pool's job there ends at the slot gate.
 """
 from __future__ import annotations
 
@@ -60,23 +71,39 @@ class PagePool:
         swap holds; pages listed by several slots (or cached) are the shared
         read-only prefix pages;
       - ``free``, ``{ref > 0}``, and ``{ref == 0, cached}`` (the evictable
-        set, mirrored by the evictor's LRU) partition ``{1, .., num_pages-1}``.
+        set, mirrored by the evictor's LRU) partition ``{1, .., num_pages-1}``;
+      - a page id is listed by at most one *group*'s tables (a kv page never
+        doubles as an encoder page and vice versa).
     """
 
     def __init__(self, num_pages: int, page_size: int, batch_size: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int,
+                 groups: Tuple[str, ...] = ("kv",),
+                 group_max_pages: Optional[Dict[str, int]] = None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the trash page)")
         if page_size < 1 or max_pages_per_slot < 1:
             raise ValueError("page_size/max_pages_per_slot must be >= 1")
+        if groups[0] != "kv":
+            raise ValueError(f"group 'kv' must come first, got {groups!r}")
         self.num_pages = num_pages
         self.page_size = page_size
         self.batch_size = batch_size
         self.max_pages_per_slot = max_pages_per_slot
+        self.groups = tuple(groups)
+        self._maxp: Dict[str, int] = {g: max_pages_per_slot for g in groups}
+        if group_max_pages:
+            self._maxp.update(group_max_pages)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._slot_pages: List[List[int]] = [[] for _ in range(batch_size)]
-        self._table = np.full((batch_size, max_pages_per_slot), TRASH_PAGE,
-                              np.int32)
+        self._slot_pages_g: Dict[str, List[List[int]]] = {
+            g: [[] for _ in range(batch_size)] for g in groups}
+        self._table_g: Dict[str, np.ndarray] = {
+            g: np.full((batch_size, self._maxp[g]), TRASH_PAGE, np.int32)
+            for g in groups}
+        # the "kv" group keeps its historical attribute names: every
+        # read-write path (COW, swap, growth) is kv-only and indexes these
+        self._slot_pages = self._slot_pages_g["kv"]
+        self._table = self._table_g["kv"]
         self._ref = np.zeros(num_pages, np.int32)   # slot listings + holds
         self._held: Dict[int, int] = {}             # page -> swap-hold count
         self._cached: set = set()                   # prefix-cache resident
@@ -110,12 +137,12 @@ class PagePool:
             avail -= self.faults.pressure_pages()
         return n <= avail
 
-    def slot_pages(self, slot: int) -> List[int]:
-        return list(self._slot_pages[slot])
+    def slot_pages(self, slot: int, group: str = "kv") -> List[int]:
+        return list(self._slot_pages_g[group][slot])
 
-    def table(self) -> np.ndarray:
-        """[B, max_pages_per_slot] int32 page ids (trash-padded)."""
-        return self._table
+    def table(self, group: str = "kv") -> np.ndarray:
+        """[B, max_pages_per_slot(group)] int32 page ids (trash-padded)."""
+        return self._table_g[group]
 
     def page_ref(self, page: int) -> int:
         return int(self._ref[page])
@@ -186,19 +213,22 @@ class PagePool:
             raise RuntimeError(f"slot {slot} already owns pages")
         return self.grow(slot, n)
 
-    def grow(self, slot: int, n: int = 1) -> List[int]:
+    def grow(self, slot: int, n: int = 1, group: str = "kv") -> List[int]:
         """Append ``n`` fresh private pages to ``slot`` (which may already
         own some).
 
         This is what lazy decode growth calls when a slot's write position
         crosses a page boundary: the new pages extend the slot's page-table
         prefix, so already-written logical positions keep their mapping.
+        Non-``"kv"`` groups use the same path at admission time only (an
+        encoder allocation is a one-shot grow, never incremental).
         """
-        owned = len(self._slot_pages[slot])
-        if owned + n > self.max_pages_per_slot:
+        sp, tab = self._slot_pages_g[group], self._table_g[group]
+        owned = len(sp[slot])
+        if owned + n > self._maxp[group]:
             raise ValueError(
-                f"slot {slot} would own {owned + n} pages > "
-                f"max_pages_per_slot={self.max_pages_per_slot}")
+                f"slot {slot} would own {owned + n} {group} pages > "
+                f"max={self._maxp[group]}")
         if self.faults is not None and self.faults.fires("page_grow"):
             # raised before any allocation, so the pool is untouched: the
             # engine retries next step (bounded budget) and a mid-plan fault
@@ -208,11 +238,11 @@ class PagePool:
         pages = self._take_free(n)
         for p in pages:
             self._ref[p] = 1
-        self._slot_pages[slot].extend(pages)
-        self._table[slot, owned : owned + n] = pages
+        sp[slot].extend(pages)
+        tab[slot, owned : owned + n] = pages
         return pages
 
-    def attach(self, slot: int, pages: List[int]) -> None:
+    def attach(self, slot: int, pages: List[int], group: str = "kv") -> None:
         """Share resident pages into ``slot``'s table (prefix-cache hit).
 
         The pages must be resident — referenced by another slot, held by a
@@ -220,11 +250,12 @@ class PagePool:
         slot's logical page list in order.  Each gains one reference; an
         evictable page becomes pinned (leaves the evictor's LRU).
         """
-        owned = len(self._slot_pages[slot])
-        if owned + len(pages) > self.max_pages_per_slot:
+        sp, tab = self._slot_pages_g[group], self._table_g[group]
+        owned = len(sp[slot])
+        if owned + len(pages) > self._maxp[group]:
             raise ValueError(
-                f"slot {slot} would own {owned + len(pages)} pages > "
-                f"max_pages_per_slot={self.max_pages_per_slot}")
+                f"slot {slot} would own {owned + len(pages)} {group} pages "
+                f"> max={self._maxp[group]}")
         for p in pages:
             if p == TRASH_PAGE:
                 raise ValueError("cannot attach the trash page")
@@ -233,8 +264,8 @@ class PagePool:
                     raise RuntimeError(f"page {p} is not resident (freed?)")
                 self._evictor.on_referenced(p)
             self._ref[p] += 1
-        self._slot_pages[slot].extend(pages)
-        self._table[slot, owned : owned + len(pages)] = pages
+        sp[slot].extend(pages)
+        tab[slot, owned : owned + len(pages)] = pages
 
     def cow(self, slot: int, logical_idx: int, *,
             hold_src: bool = False) -> Tuple[int, int]:
@@ -272,10 +303,56 @@ class PagePool:
         self._release(page)
 
     def free_slot(self, slot: int) -> None:
-        for p in self._slot_pages[slot]:
+        """Release every page ``slot`` lists, across *all* groups.  Read-only
+        group pages registered in the cache simply become evictable; private
+        ones return to the free list."""
+        for g in self.groups:
+            self.free_group(slot, g)
+
+    def free_group(self, slot: int, group: str) -> None:
+        """Release just ``slot``'s pages of one group (e.g. drop the fresh
+        encoder pages an admission pre-allocated before its cache hit)."""
+        sp, tab = self._slot_pages_g[group], self._table_g[group]
+        for p in sp[slot]:
             self._release(p)
-        self._slot_pages[slot] = []
-        self._table[slot, :] = TRASH_PAGE
+        sp[slot] = []
+        tab[slot, :] = TRASH_PAGE
+
+    def detach_group(self, slot: int, group: str) -> List[int]:
+        """Preempt a read-only group: the slot's references on its pages
+        become *swap holds* (pinned — not evictable, not reallocatable) and
+        the table row clears.  The page data never leaves the device (the
+        group is read-only), so there is nothing to host-swap; resume calls
+        :meth:`reattach_group` with the returned page list."""
+        sp, tab = self._slot_pages_g[group], self._table_g[group]
+        pages = sp[slot]
+        for p in pages:
+            self._held[p] = self._held.get(p, 0) + 1
+        sp[slot] = []
+        tab[slot, :] = TRASH_PAGE
+        return pages
+
+    def reattach_group(self, slot: int, group: str, pages: List[int]) -> None:
+        """Resume a read-only group: each hold from :meth:`detach_group`
+        converts back into a slot reference, in order."""
+        sp, tab = self._slot_pages_g[group], self._table_g[group]
+        if sp[slot]:
+            raise RuntimeError(f"slot {slot} already owns {group} pages")
+        for p in pages:
+            held = self._held[p] - 1
+            if held:
+                self._held[p] = held
+            else:
+                del self._held[p]
+        sp[slot] = list(pages)
+        tab[slot, : len(pages)] = pages
+
+    def drop_group_holds(self, pages: List[int]) -> None:
+        """Abandon a detached read-only group (its request finished or was
+        re-admitted from scratch): drop each hold; cached pages turn
+        evictable, uncached ones free."""
+        for p in pages:
+            self.drop_hold(p)
 
     # ------------------------------------------------------- swap support ---
     def split_for_swap(self, slot: int) -> Tuple[List[Tuple[int, int]],
@@ -353,9 +430,15 @@ class PagePool:
     # ---------------------------------------------------------- invariants --
     def check_invariants(self) -> None:
         counts = np.zeros(self.num_pages, np.int64)
-        for sp in self._slot_pages:
-            for p in sp:
-                counts[p] += 1
+        group_of: Dict[int, str] = {}
+        for g in self.groups:
+            for sp in self._slot_pages_g[g]:
+                for p in sp:
+                    counts[p] += 1
+                    other = group_of.setdefault(p, g)
+                    assert other == g, (
+                        f"page {p} listed by both {other!r} and {g!r} "
+                        "group tables")
         held = self.held()
         assert counts[TRASH_PAGE] == 0, "trash page was allocated"
         assert TRASH_PAGE not in self._free, "trash page in free list"
@@ -376,11 +459,15 @@ class PagePool:
                 "evictor LRU out of sync with unreferenced cached pages")
         else:
             assert not evictable, "cached pages with no evictor registered"
-        for s, sp in enumerate(self._slot_pages):
-            assert self._table[s, : len(sp)].tolist() == sp, "table out of sync"
-            assert (self._table[s, len(sp):] == TRASH_PAGE).all(), \
-                "table out of sync (tail)"
-            assert len(set(sp)) == len(sp), f"slot {s} lists a page twice"
+        for g in self.groups:
+            tab = self._table_g[g]
+            for s, sp in enumerate(self._slot_pages_g[g]):
+                assert tab[s, : len(sp)].tolist() == sp, \
+                    f"{g} table out of sync"
+                assert (tab[s, len(sp):] == TRASH_PAGE).all(), \
+                    f"{g} table out of sync (tail)"
+                assert len(set(sp)) == len(sp), \
+                    f"slot {s} lists a {g} page twice"
 
 
 # ------------------------------------------------------- device-side ops ----
@@ -422,7 +509,8 @@ def write_prefix(pools: Any, kv: Any, page: jax.Array, off: jax.Array) -> Any:
 
 
 def assert_live_tables(table, write_pos, page_size: int, active, *,
-                       refs=None, held=None, cached=None) -> None:
+                       refs=None, held=None, cached=None,
+                       aux_tables=()) -> None:
     """Pager tripwires, vectorized (pure numpy — this runs every engine step).
 
     Stale-table detection: an *active* slot's live page-table prefix must
@@ -438,6 +526,12 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     must be *private and writable* — exactly one reference, no swap hold, and
     not registered read-only in the prefix cache (shared pages take a
     copy-on-write before any write reaches them).
+
+    ``aux_tables`` carries the pool's non-KV page-group tables (e.g. the
+    read-only encoder group): their listings join the refcount census —
+    every group's references share one counter — but they are exempt from
+    the stale/write-cursor checks, which are about the decode write path
+    and only KV pages are ever written mid-decode.
 
     Raises :class:`PagerInvariantError` (a ``RuntimeError``) naming the
     slot/page instead of letting the decode silently read or clobber shared
@@ -466,6 +560,10 @@ def assert_live_tables(table, write_pos, page_size: int, active, *,
     # every table listing is counted: refs == occurrences + swap holds
     occ = np.bincount(table[table != TRASH_PAGE].ravel(),
                       minlength=refs.shape[0])
+    for aux in aux_tables:
+        aux = np.asarray(aux)
+        occ += np.bincount(aux[aux != TRASH_PAGE].ravel(),
+                           minlength=refs.shape[0])
     bad = np.nonzero(refs != occ + held)[0]
     bad = bad[bad != TRASH_PAGE]
     if bad.size:

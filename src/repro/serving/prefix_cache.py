@@ -152,6 +152,70 @@ class PrefixCache:
         self.stats.inserted_pages += inserted
         return inserted
 
+    # ----------------------------------------------- exact-match (read-only) --
+    def data_hashes(self, data, n_pages: int, tag: str = "enc") -> List[bytes]:
+        """Whole-sequence keyed page hashes for read-only page groups
+        (encoder cross-attention K/V).
+
+        ``data`` is the full host array the pages were derived from (a
+        request's encoder frames).  A bidirectional encoder sees every
+        frame, so a page is only reusable when the *entire* sequence
+        matches — chaining prefix hashes (the :meth:`block_hashes` scheme)
+        would alias pages of different sequences that share a prefix.  The
+        whole sequence is hashed into one key and per-page hashes are
+        derived from (key, page index), so :meth:`match_exact` is
+        all-or-nothing by construction."""
+        a = np.ascontiguousarray(np.asarray(data))
+        key = hashlib.sha256(
+            self._root + tag.encode() + str(a.shape).encode() + a.tobytes()
+        ).digest()
+        return [hashlib.sha256(key + i.to_bytes(4, "little")).digest()
+                for i in range(n_pages)]
+
+    def match_exact(self, hashes: List[bytes],
+                    probe_faults: bool = True) -> List[int]:
+        """All-or-nothing lookup of a :meth:`data_hashes` page set.
+
+        Returns the cached pages (ready for ``pool.attach(...,
+        group="enc")``) or ``[]`` — a partially evicted set is a miss (the
+        survivors stay resident until LRU reclaims them; they can never
+        alias other content).  Matched evictable pages are LRU-touched like
+        in :meth:`match`.  The ``enc_evict`` fault site forces the matched
+        set out between match and attach, degrading the admission to a
+        fresh encode."""
+        self.stats.lookups += 1
+        pages = [self._index.get(h) for h in hashes]
+        if not pages or any(p is None for p in pages):
+            return []
+        if probe_faults and self.faults is not None \
+                and self.faults.fires("enc_evict"):
+            for p in pages:
+                if p in self._lru:
+                    self._evict_page(p)
+            return []
+        self._clock += 1
+        for p in pages:
+            if p in self._lru:
+                self._lru[p] = self._clock
+        self.stats.hits += 1
+        self.stats.matched_tokens += len(pages) * self.page_size
+        return pages
+
+    def insert_exact(self, hashes: List[bytes], pages: List[int]) -> int:
+        """Index a slot's read-only pages under :meth:`data_hashes` keys.
+        Idempotent like :meth:`insert`; the slot must still reference the
+        pages.  Returns the number of pages newly indexed."""
+        inserted = 0
+        for h, p in zip(hashes, pages):
+            if h in self._index or p in self._by_page:
+                continue
+            self._index[h] = p
+            self._by_page[p] = h
+            self.pool.mark_cached(p)
+            inserted += 1
+        self.stats.inserted_pages += inserted
+        return inserted
+
     # ------------------------------------------------------- evictor hooks --
     def on_unreferenced(self, page: int) -> None:
         """Pool callback: a cached page's last reference dropped → evictable."""

@@ -96,6 +96,7 @@ class _AdmissionCost:
     full_match: bool      # page-aligned whole-prompt match (needs a COW)
     fresh: int            # pages to allocate (incl. the COW destination)
     pinned: int           # matched-but-unreferenced pages the attach pins
+    enc: int = 0          # read-only encoder pages (enc-dec requests only)
 
 
 class Scheduler:
@@ -139,11 +140,17 @@ class Scheduler:
         and :meth:`pages_needed`): cold total, cache-matched prefix credit,
         the full-match COW page, and the matched-but-unreferenced pages the
         attach is about to pin (which must not double as evictable headroom
-        for the fresh allocation).  ``probe_faults=False`` marks the
-        diagnostic twin's call: it must not consume fault-plan budget."""
+        for the fresh allocation).  Enc-dec requests (``req.frames``) are
+        additionally charged the read-only encoder pages their frames cover
+        — conservatively assumed fresh here; on an encoder-cache hit the
+        engine frees them again and attaches the shared pages instead.
+        ``probe_faults=False`` marks the diagnostic twin's call: it must not
+        consume fault-plan budget."""
         total = pool.pages_needed(self._tokens_wanted(req))
+        frames = getattr(req, "frames", None)
+        enc = pool.pages_needed(len(frames)) if frames is not None else 0
         if cache is None:
-            return _AdmissionCost(total, [], 0, False, total, 0)
+            return _AdmissionCost(total, [], 0, False, total, 0, enc)
         # chain hashes are pure in the prompt tokens: compute them once per
         # request, not once per engine step while blocked
         hs = getattr(req, "_block_hashes", None)
@@ -154,15 +161,17 @@ class Scheduler:
         full_match = bool(matched) and mtok == len(req.prompt)
         fresh = total - len(matched) + (1 if full_match else 0)
         pinned = sum(1 for p in matched if pool.page_ref(p) == 0)
-        return _AdmissionCost(total, matched, mtok, full_match, fresh, pinned)
+        return _AdmissionCost(total, matched, mtok, full_match, fresh, pinned,
+                              enc)
 
     def pages_needed(self, req, pool: PagePool, cache=None) -> int:
         """Pages that must be allocatable to admit ``req`` — the diagnostic
         twin of :meth:`plan`, sharing its arithmetic via
         :meth:`_admission_cost` (fresh pages plus the matched-but-unreferenced
-        pages the attach would pin)."""
+        pages the attach would pin, plus an enc-dec request's encoder
+        pages)."""
         cost = self._admission_cost(req, pool, cache, probe_faults=False)
-        return cost.fresh + cost.pinned
+        return cost.fresh + cost.pinned + cost.enc
 
     def plan(self, queue: Deque, free_slots: List[int], pool: PagePool,
              reserve: int = 0, cache=None) -> List[PrefillBucket]:
@@ -203,7 +212,7 @@ class Scheduler:
             # headroom for the fresh allocation — otherwise attach + grow
             # would blow up on a pool whose only evictable pages are the very
             # ones this request is re-using
-            if not pool.can_alloc(fresh + reserve + cost.pinned):
+            if not pool.can_alloc(fresh + reserve + cost.pinned + cost.enc):
                 break                       # FCFS: head blocks the line
             blen = (suffix if self.mode == "slotwise"
                     else self.bucket_len(suffix))
@@ -223,6 +232,11 @@ class Scheduler:
                             if full_match else None)
                 if fresh - (1 if full_match else 0):
                     pool.grow(slot, fresh - (1 if full_match else 0))
+                if cost.enc:
+                    # read-only encoder pages, allocated fresh here; on an
+                    # encoder-cache hit the engine frees them and attaches
+                    # the shared cached pages instead
+                    pool.grow(slot, cost.enc, group="enc")
             except TransientFault:
                 # injected grow fault mid-admission: roll the whole admission
                 # back (release attached pages + the COW copy and its hold,

@@ -48,6 +48,13 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
     same walk under a seeded FaultPlan — allocator outages, grow faults (the
     harness rolls back like the scheduler does), forced prefix evictions, and
     a pool-pressure window — and the invariants must still hold after every
+    op.
+
+    Slots carry randomly assigned state-leaf kinds beyond paged KV: *hybrid*
+    slots own a fixed-rows payload that rides the swap image through
+    preempt/abandon/resume, and *encdec* slots own read-only enc-group pages
+    that detach under swap holds and reattach on resume — the refcount
+    census (refs == listings-across-groups + holds) must hold after every
     op."""
     from repro.serving.faults import FaultPlan, FaultSpec, TransientFault
     from repro.serving.prefix_cache import PrefixCache
@@ -55,7 +62,7 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
     rng = np.random.default_rng(0)
     B, PS, NP, MAXP = 5, 4, 25, 8
     pool = KV.PagePool(num_pages=NP, page_size=PS, batch_size=B,
-                       max_pages_per_slot=MAXP)
+                       max_pages_per_slot=MAXP, groups=("kv", "enc"))
     cache = PrefixCache(pool, PS, mode="stress")
     sched = Scheduler(page_size=PS, max_seq=MAXP * PS)
     plan = None
@@ -69,8 +76,10 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
         pool.faults = plan
         cache.faults = plan
     stems = [list(rng.integers(0, 3, 8)) for _ in range(3)]   # shared prefixes
-    live: dict[int, dict] = {}             # slot -> {tokens, written}
+    live: dict[int, dict] = {}             # slot -> {tokens, written, kind}
     swapped: list[dict] = []               # swap states
+    fixed: dict[int, float] = {}           # hybrid slots' fixed-rows payload
+    roundtrips = {"hybrid": 0, "encdec": 0}
 
     def admit(slot):
         toks = stems[int(rng.integers(0, 3))] + list(
@@ -112,15 +121,31 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
                 # this aborted admission attached/copied and walk away
                 pool.free_slot(slot)
                 return
+        # state leaves beyond paged KV: a hybrid slot carries a fixed-rows
+        # payload (not paged — it rides swap images), an encdec slot owns
+        # read-only enc-group pages next to its KV pages
+        kind = ("kv", "hybrid", "encdec")[int(rng.integers(0, 3))]
+        if kind == "encdec":
+            enc = 1 + int(rng.integers(0, 2))
+            if not pool.can_alloc(enc):
+                kind = "kv"
+            else:
+                try:
+                    pool.grow(slot, enc, group="enc")
+                except TransientFault:
+                    pool.free_slot(slot)
+                    return
+        if kind == "hybrid":
+            fixed[slot] = float(rng.standard_normal())
         cache.insert(toks, pool.slot_pages(slot), t // PS)
-        live[slot] = {"tokens": list(toks), "written": t}
+        live[slot] = {"tokens": list(toks), "written": t, "kind": kind}
 
     ops_hit = set()
     for i in range(500):
         if plan is not None:
             plan.begin_step(i)
         op = rng.choice(["admit", "decode", "finish", "preempt", "swap_in",
-                         "cow", "evict"])
+                         "cow", "evict", "abandon"])
         slot = int(rng.integers(0, B))
         if op == "admit" and slot not in live:
             admit(slot)
@@ -136,11 +161,15 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
                     continue               # engine behavior: retry next step
             st["tokens"].append(int(rng.integers(0, 3)))
             st["written"] += 1
+            if st["kind"] == "hybrid":
+                fixed[slot] += 1.0         # recurrent state advances
         elif op == "finish" and slot in live:
             st = live.pop(slot)
+            fixed.pop(slot, None)
             cache.insert(st["tokens"], pool.slot_pages(slot),
                          st["written"] // PS)
-            pool.free_slot(slot)
+            pool.free_slot(slot)           # releases every group's pages
+            assert pool.slot_pages(slot, "enc") == []
         elif op == "preempt" and live:
             victim = max(live)             # any deterministic choice works
             kept, private = pool.split_for_swap(victim)
@@ -150,16 +179,42 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
             pool.swap_out(victim, (kept, private))
             for _, p in kept:              # ...and stay pinned (un-evictable)
                 assert pool.page_ref(p) > 0
-            swapped.append(dict(live.pop(victim), kept=kept,
-                                private_lis=[li for li, _ in private]))
+            st = dict(live.pop(victim), kept=kept,
+                      private_lis=[li for li, _ in private])
+            if st["kind"] == "hybrid":
+                # fixed rows ride the host swap image, not the pager
+                st["fx"] = fixed.pop(victim)
+            elif st["kind"] == "encdec":
+                # read-only pages never leave the device: refs become holds
+                st["enc_held"] = pool.detach_group(victim, "enc")
+                assert pool.slot_pages(victim, "enc") == []
+                for p in st["enc_held"]:
+                    assert pool.held()[p] > 0
+            swapped.append(st)
         elif op == "swap_in" and swapped:
             st = swapped[0]
             idle = [s for s in range(B) if s not in live]
             if idle and pool.can_alloc(len(st["private_lis"])):
                 pool.swap_in(idle[0], st["kept"], st["private_lis"])
+                if st["kind"] == "encdec":
+                    pool.reattach_group(idle[0], "enc", st["enc_held"])
+                    assert pool.slot_pages(idle[0], "enc") == st["enc_held"]
+                elif st["kind"] == "hybrid":
+                    fixed[idle[0]] = st["fx"]     # bit-exact round trip
+                if st["kind"] != "kv":
+                    roundtrips[st["kind"]] += 1
                 live[idle[0]] = {"tokens": st["tokens"],
-                                 "written": st["written"]}
+                                 "written": st["written"],
+                                 "kind": st["kind"]}
                 swapped.pop(0)
+        elif op == "abandon" and swapped:
+            # a swapped request dies (deadline expiry / cancel): kept pages
+            # lose their swap holds, detached enc pages too — cached pages
+            # turn evictable, uncached ones return to the free list
+            st = swapped.pop(int(rng.integers(0, len(swapped))))
+            for _, p in st["kept"]:
+                pool.drop_hold(p)
+            pool.drop_group_holds(st.get("enc_held", []))
         elif op == "cow" and live:
             # explicit COW of any shared/cached page a live slot lists
             cands = [(s, li, p) for s in live
@@ -174,18 +229,23 @@ def test_pager_randomized_stress_interleaved_ops(faulted):
             cache.evict_one()
         ops_hit.add(op)
         pool.check_invariants()
-    # the randomized walk must actually exercise the whole op surface
+    # the randomized walk must actually exercise the whole op surface,
+    # including fixed-rows and enc-group slots through full swap cycles
     assert ops_hit == {"admit", "decode", "finish", "preempt", "swap_in",
-                       "cow", "evict"}
+                       "cow", "evict", "abandon"}
+    assert roundtrips["hybrid"] > 0 and roundtrips["encdec"] > 0
     assert cache.stats.hits > 0 and cache.stats.evicted_pages > 0
     if plan is not None:
         # the chaos actually happened — and every fire is in the diff log
         for site in ("page_alloc", "page_grow", "prefix_evict"):
             assert plan.injected[site] > 0, f"{site} never fired"
         assert len(plan.log) == plan.total_injected
-    # conservation: every page is free, referenced, or evictable-cached
-    referenced = {p for s in range(B) for p in pool.slot_pages(s)}
+    # conservation: every page is free, referenced (any group, incl. pages
+    # held by in-flight swap states), or evictable-cached
+    referenced = {p for s in range(B) for g in pool.groups
+                  for p in pool.slot_pages(s, g)}
     referenced |= {p for st in swapped for _, p in st["kept"]}
+    referenced |= {p for st in swapped for p in st.get("enc_held", [])}
     evictable = cache.evictable_count()
     assert len(referenced) + pool.free_pages + evictable == pool.num_pages - 1
 

@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import api
 from repro.serving import kv_cache as KV
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, UnsupportedModelError
 from repro.serving.scheduler import Scheduler
 
 
@@ -297,5 +297,7 @@ def test_int8_engine_greedy_matches_contiguous_reference():
 def test_paged_unsupported_families_raise():
     cfg = get_config("rwkv6-7b", smoke=True)
     params = api.init_model(jax.random.PRNGKey(0), cfg)
-    with pytest.raises(NotImplementedError):
+    # the named construction-time error (a NotImplementedError subclass, so
+    # pre-existing callers catching that still work)
+    with pytest.raises(UnsupportedModelError, match="paged serving"):
         ServingEngine(params, cfg, batch_size=2, max_seq=32)
