@@ -85,7 +85,17 @@ def main(argv=None):
                          "degradation demo: the drain must survive)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the --chaos fault plan")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable engine observability (timelines, "
+                         "histograms, step journal) — the overhead-"
+                         "benchmark baseline configuration")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the served batch's step journal + request "
+                         "timelines as Chrome trace_event JSON (open in "
+                         "https://ui.perfetto.dev or chrome://tracing)")
     args = ap.parse_args(argv)
+    if args.trace_out and args.no_metrics:
+        ap.error("--trace-out needs metrics enabled (drop --no-metrics)")
 
     cfg = get_config(args.arch, smoke=args.smoke).with_(
         act_quant=args.act_quant)
@@ -143,7 +153,8 @@ def main(argv=None):
                         prefix_cache=prefix_cache,
                         max_queue=args.max_queue,
                         fault_plan=fault_plan,
-                        strict=not args.chaos)
+                        strict=not args.chaos,
+                        metrics=not args.no_metrics)
     rng = np.random.default_rng(0)
     # deadlines are wall-clock budgets from arrival: rebase the synthetic
     # Poisson offsets onto the engine's clock, or every request would look
@@ -174,40 +185,60 @@ def main(argv=None):
             for i in range(args.requests)]
     t0 = time.perf_counter()
     accepted = sum(eng.submit(r) for r in reqs)
-    stats = eng.run_until_drained()
+    eng.run_until_drained()
     dt = time.perf_counter() - t0
-    served = [r for r in reqs if r.done_t and r.first_token_t
-              and r.finish_reason in ("completed", "length")]
-    lat = (float(np.mean([(r.done_t - r.first_token_t)
-                          / max(len(r.output) - 1, 1) for r in served]))
-           if served else float("nan"))
-    print(f"served {stats.completed}/{args.requests} requests "
+
+    # every stat line below renders engine.metrics_snapshot() — the single
+    # structured source for operator reporting (benchmarks read it too)
+    snap = eng.metrics_snapshot()
+    st = snap["engine"]
+
+    def ms(h, k="p50"):
+        return f"{snap['latency'][h][k] * 1e3:.1f}ms"
+
+    print(f"served {st['completed']}/{args.requests} requests "
           f"({accepted} accepted), "
-          f"{stats.decoded_tokens} tokens in {dt:.2f}s  "
-          f"({stats.decoded_tokens/dt:.1f} tok/s, {lat*1e3:.1f} ms/token)")
-    print(f"lifecycle: rejected={stats.rejected} expired={stats.expired} "
-          f"cancelled={stats.cancelled} failed={stats.failed} "
-          f"retries={stats.retries} faults_injected={stats.faults_injected}")
+          f"{st['decoded_tokens']} tokens in {dt:.2f}s  "
+          f"({st['decoded_tokens'] / dt:.1f} tok/s)")
+    if not args.no_metrics:
+        print(f"latency: ttft p50={ms('ttft_s')} p99={ms('ttft_s', 'p99')}  "
+              f"itl p50={ms('itl_s')} p99={ms('itl_s', 'p99')}  "
+              f"e2e p50={ms('e2e_s')} p99={ms('e2e_s', 'p99')}  "
+              f"queue-wait p50={ms('queue_wait_s')}  "
+              f"swap-stall p50={ms('swap_stall_s')}")
+    print(f"lifecycle: rejected={st['rejected']} expired={st['expired']} "
+          f"cancelled={st['cancelled']} failed={st['failed']} "
+          f"retries={st['retries']} faults_injected={st['faults_injected']}")
     if fault_plan is not None:
-        print(f"chaos: fault log {fault_plan.log}")
-    print(f"pager: peak concurrency {stats.max_active}/{args.batch_size}, "
-          f"{stats.grown_pages} pages grown lazily, "
-          f"{stats.preemptions} preemptions "
-          f"({stats.swapped_out_bytes/1e6:.1f}MB swapped out, "
-          f"of which {stats.swapped_fixed_bytes/1e6:.1f}MB fixed-rows "
-          f"state, {stats.swapped_in_bytes/1e6:.1f}MB back in)")
+        print(f"chaos: fault counters "
+              f"{snap['counters'].get('faults_fired_total', {})}")
+    pg = snap["pager"]
+    print(f"pager: peak concurrency {st['max_active']}/{args.batch_size}, "
+          f"{st['grown_pages']} pages grown lazily, "
+          f"{st['preemptions']} preemptions "
+          f"({st['swapped_out_bytes'] / 1e6:.1f}MB swapped out, "
+          f"of which {st['swapped_fixed_bytes'] / 1e6:.1f}MB fixed-rows "
+          f"state, {st['swapped_in_bytes'] / 1e6:.1f}MB back in); "
+          f"free={pg['free_pages']}/{pg['total_pages']} "
+          f"counts={pg['counts']}")
     if eng.has_enc:
-        print(f"encoder pages: {stats.enc_encodes} encodes, "
-              f"{stats.enc_hits} exact-match hits")
+        print(f"encoder pages: {st['enc_encodes']} encodes, "
+              f"{st['enc_hits']} exact-match hits")
     if prefix_cache:
-        hit = stats.prefix_hits / max(stats.admitted, 1)
+        hit = st["prefix_hits"] / max(st["admitted"], 1)
         print(f"prefix-cache: hit-rate {hit:.0%} "
-              f"({stats.prefix_hits}/{stats.admitted} admissions, "
-              f"{stats.prefix_matched_tokens} prompt tokens served from "
-              f"cache), {stats.pages_shared} pages shared, "
-              f"{stats.pages_inserted} inserted, "
-              f"{stats.pages_evicted} evicted, "
-              f"{stats.cow_copies} copy-on-writes")
+              f"({st['prefix_hits']}/{st['admitted']} admissions, "
+              f"{st['prefix_matched_tokens']} prompt tokens served from "
+              f"cache), {st['pages_shared']} pages shared, "
+              f"{st['pages_inserted']} inserted, "
+              f"{st['pages_evicted']} evicted, "
+              f"{st['cow_copies']} copy-on-writes")
+    if args.trace_out:
+        from repro.serving.trace import write_chrome_trace
+        obj = write_chrome_trace(args.trace_out, eng.trace,
+                                 n_slots=args.batch_size)
+        print(f"trace: {len(obj['traceEvents'])} events -> {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

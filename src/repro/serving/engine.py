@@ -93,9 +93,11 @@ from repro.models import api
 from repro.serving import kv_cache as KV
 from repro.serving.faults import (FaultPlan, SimulatedDeviceError,
                                   TransientFault, corrupt_host_image)
+from repro.serving.metrics import MetricsRegistry, format_pending
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_per_slot
 from repro.serving.scheduler import Scheduler
+from repro.serving.trace import TraceRecorder
 
 #: Terminal states every submitted request reaches exactly one of:
 #:   completed — decoded its EOS token
@@ -171,7 +173,8 @@ class _SwapState:
     private_lis: List[int]        # logical idxs of the swapped rows
     pos: int                      # next write position
     last_tok: int                 # token feeding the next decode step
-    nbytes: int                   # swap buffer size (stats)
+    nbytes: int                   # KV swap-buffer bytes (stats)
+    fbytes: int = 0               # fixed-rows (SSM state) bytes in the image
     on_host: bool = False         # rows materialized to numpy (device freed)
     checksum: Optional[int] = None  # CRC-32 of the host image (drain time)
     fixed_rows: Any = None        # pytree [M, 1, ...] SSM state (or None)
@@ -194,6 +197,7 @@ class EngineStats:
     swapped_out_bytes: int = 0    # pool bytes copied device -> host
     swapped_in_bytes: int = 0     # pool bytes copied host -> device
     swapped_fixed_bytes: int = 0  # of swapped_out: fixed-rows state bytes
+    swapped_fixed_in_bytes: int = 0  # of swapped_in: fixed-rows state bytes
     enc_hits: int = 0             # admissions reusing cached encoder pages
     enc_encodes: int = 0          # admissions that ran the encoder
     idle_steps: int = 0           # drain iterations with nothing decodable
@@ -237,6 +241,7 @@ class ServingEngine:
         strict: bool = True,
         fault_plan: Optional[FaultPlan] = None,
         retry_budget: int = 3,
+        metrics: bool = True,
     ):
         ok, why = api.paged_supported(cfg)
         if not ok:
@@ -333,6 +338,39 @@ class ServingEngine:
         self._step_idx = 0                  # all engine steps (idle included)
         self._retry_pending = False         # last step skipped work on a fault
 
+        # ----- observability: metrics registry + lifecycle/journal trace ---
+        # One clock rules everything: the registry and recorder late-bind
+        # to self._clock, so a test that swaps the engine clock gets
+        # deterministic histograms, timelines, and trace exports for free.
+        # All recording is host-side bookkeeping (ints, floats, deques) —
+        # it never touches jax, the pools, or the RNG stream, which is what
+        # makes the metrics-on/off greedy token-identity guarantee hold.
+        # ``metrics=False`` strips every observe from the hot path (the
+        # overhead-benchmark baseline); the registry still exists so
+        # metrics_snapshot() stays well-formed (empty histograms).
+        self._obs = metrics
+        self.metrics = MetricsRegistry(clock=lambda: self._clock())
+        self.trace = TraceRecorder(lambda: self._clock(), enabled=metrics)
+        self._h_ttft = self.metrics.histogram(
+            "ttft_s", "submit -> first token (engine-internal)")
+        # ITL gaps cluster within a decade (one step vs a stalled step), so
+        # this histogram gets 4x the bucket resolution (~5%/bucket) — the
+        # mixed-prefill benchmark discriminates stalls through it
+        self._h_itl = self.metrics.histogram(
+            "itl_s", "gap between consecutive tokens of one request",
+            per_decade=48)
+        self._h_e2e = self.metrics.histogram(
+            "e2e_s", "submit -> terminal state")
+        self._h_qwait = self.metrics.histogram(
+            "queue_wait_s", "submit -> first admission to a slot")
+        self._h_swap = self.metrics.histogram(
+            "swap_stall_s", "preempt (swap-out) -> swap-in resume")
+        self._fault_ctr = self.metrics.counter(
+            "faults_fired_total", "fault-plan probes fired, by site")
+        if fault_plan is not None:
+            fault_plan.sink = self._on_fault
+        self._last_dec: List[int] = []      # decode slots of the last step
+
         # donate the pools: the step's output cache aliases the input buffers
         # instead of allocating a second full pool every decoded token.
         # The launch signature follows the config's state leaves — hybrid
@@ -410,6 +448,25 @@ class ServingEngine:
             )
         self._sample = jax.jit(sample_per_slot)
 
+    # ----------------------------------------------------- observability ---
+    def _on_fault(self, site: str) -> None:
+        """FaultPlan sink: every probe that fires lands as a labeled counter
+        increment + a journal mark, so chaos runs can reconcile the plan's
+        own ``injected`` tally against engine-side counters."""
+        if self._obs:
+            self._fault_ctr.inc(site=site)
+            self.trace.note_fault(site)
+
+    def _note_finish(self, req: Request) -> None:
+        """Close a request's timeline (any terminal reason except rejected —
+        a rejected request never entered the queue and has no timeline)."""
+        t = req.done_t
+        tl = self.trace.timeline(req.uid)
+        tl.add(t, "finish", reason=req.finish_reason)
+        tl.finish_t = t
+        self._h_e2e.observe(t - req.arrival_t)
+        self.trace.finish(req.uid)
+
     # ------------------------------------------------------------- admin ---
     def _reject(self, req: Request, why: str, *, raise_: bool) -> bool:
         """Structured rejection: the request turns terminal *now* — it never
@@ -469,6 +526,10 @@ class ServingEngine:
         req.submit_seq = self._next_seq
         self._next_seq += 1
         self.queue.append(req)
+        if self._obs:
+            tl = self.trace.timeline(req.uid)
+            tl.submit_t = req.arrival_t
+            tl.add(req.arrival_t, "submit", prompt=len(req.prompt))
         return True
 
     def cancel(self, uid: int) -> bool:
@@ -507,6 +568,8 @@ class ServingEngine:
         counter = {"deadline": "expired", "cancelled": "cancelled",
                    "failed": "failed"}[reason]
         setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+        if self._obs:
+            self._note_finish(req)
 
     def _evict_slot(self, slot: int, reason: str,
                     error: Optional[str] = None) -> None:
@@ -647,7 +710,7 @@ class ServingEngine:
         self._swapped[req.submit_seq] = _SwapState(
             rows=rows, kept=kept, private_lis=[li for li, _ in private],
             pos=int(self.pos[slot]), last_tok=int(self.last_tok[slot]),
-            nbytes=nbytes + fbytes, fixed_rows=frows,
+            nbytes=nbytes, fbytes=fbytes, fixed_rows=frows,
             enc_pages=enc_pages, enc_len=enc_len)
         self.queue.appendleft(req)
         self.slots[slot] = None
@@ -655,8 +718,16 @@ class ServingEngine:
         self.last_tok[slot] = 0
         self.pref_target[slot] = 0
         self.stats.preemptions += 1
+        # KV and fixed-state bytes are accounted symmetrically with
+        # _resume: both sides charge nbytes + fbytes, so a drained engine
+        # always shows swapped_out_bytes == swapped_in_bytes
         self.stats.swapped_out_bytes += nbytes + fbytes
         self.stats.swapped_fixed_bytes += fbytes
+        if self._obs:
+            t = self.trace.event(req.uid, "preempt", slot=slot,
+                                 bytes=nbytes + fbytes)
+            self.trace.timeline(req.uid).preempt_t = t
+            self.trace.note_preempt(req.uid, slot)
 
     def _resume(self, slot: int, req: Request) -> None:
         """Swap a preempted request back in: re-acquire its held shared
@@ -684,7 +755,16 @@ class ServingEngine:
         # (pos) restores below pref_target and chunking picks it back up
         self.pref_target[slot] = len(req.prompt)
         self.stats.resumes += 1
-        self.stats.swapped_in_bytes += st.nbytes
+        self.stats.swapped_in_bytes += st.nbytes + st.fbytes
+        self.stats.swapped_fixed_in_bytes += st.fbytes
+        if self._obs:
+            t = self.trace.event(req.uid, "swap_in", slot=slot,
+                                 bytes=st.nbytes + st.fbytes)
+            tl = self.trace.timeline(req.uid)
+            if tl.preempt_t is not None:
+                self._h_swap.observe(t - tl.preempt_t)
+                tl.preempt_t = None
+            self.trace.note_resume(req.uid, slot)
 
     def _charge_retry(self, slot: int, why: str) -> None:
         """Charge one fault retry against the request in ``slot``; exhausting
@@ -693,6 +773,9 @@ class ServingEngine:
         req.retries += 1
         self.stats.retries += 1
         self._retry_pending = True
+        if self._obs:
+            self.trace.event(req.uid, "retry", slot=slot, why=why,
+                             n=req.retries)
         if req.retries > self.retry_budget:
             self._evict_slot(
                 slot, "failed",
@@ -845,6 +928,13 @@ class ServingEngine:
                 self.stats.prefix_matched_tokens += int(pfx[r])
                 self.stats.prefix_hits += int(pfx[r] > 0)
                 self.stats.pages_shared += bkt.shared[r]
+                if self._obs:
+                    t = self.trace.event(req.uid, "admit", slot=slot,
+                                         cached_tokens=int(pfx[r]))
+                    tl = self.trace.timeline(req.uid)
+                    if tl.admit_t is None:   # first admission = queue wait
+                        tl.admit_t = t
+                        self._h_qwait.observe(t - req.arrival_t)
         if self.sched.last_plan_aborted and self.queue:
             # a transient grow fault aborted the plan mid-admission; the
             # scheduler rolled the victim back to the queue head.  Charge its
@@ -960,11 +1050,14 @@ class ServingEngine:
                     [r.temperature if r else 0.0 for r in finals], jnp.float32)
                 firsts = np.asarray(
                     self._sample_reqs(logits, sk, temps, finals))
-                now = time.perf_counter()
+                now = self._clock()
             for r, slot in enumerate(bkt.slots):
                 self.pos[slot] += int(lens[r])
                 self.stats.prefilled_tokens += int(lens[r])
                 worked += 1
+                if self._obs:
+                    self.trace.note_chunk(slot, self.slots[slot].uid,
+                                          int(lens[r]))
                 if bkt.final[r]:
                     req = self.slots[slot]
                     if req._replay_tok is not None:
@@ -979,6 +1072,12 @@ class ServingEngine:
                         req.output.append(first)
                         req.first_token_t = now
                         self.last_tok[slot] = first
+                        if self._obs:
+                            tl = self.trace.timeline(req.uid)
+                            tl.add(now, "first_token", slot=slot)
+                            tl.first_token_t = now
+                            tl.last_emit_t = now
+                            self._h_ttft.observe(now - req.arrival_t)
                     if self.cache is not None:
                         self._cache_insert_slot(slot)
             self.stats.prefill_batches += 1
@@ -1002,6 +1101,9 @@ class ServingEngine:
         chunk rows)."""
         self._step_idx += 1
         self._retry_pending = False
+        if self._obs:
+            self.trace.begin_step(self._step_idx)
+            pc0 = dict(self.pager.counts)
         pre_injected = 0
         if self.faults is not None:
             self.faults.begin_step(self._step_idx)
@@ -1019,9 +1121,22 @@ class ServingEngine:
                     or self.faults.pressure_active()):
                 self._retry_pending = True
         self._drain_swap_buffers()
+        if self._obs:
+            pc1 = self.pager.counts
+            used = (self.pager.num_pages - 1) - self.pager.free_pages
+            self.metrics.gauge("pool_used_pages").set(used)
+            self.metrics.gauge("active_slots").set(
+                sum(s is not None for s in self.slots))
+            self.trace.end_step(
+                self._last_dec,
+                pages_used=used, pages_free=self.pager.free_pages,
+                pages_grown=pc1["grown"] - pc0["grown"],
+                pages_cow=pc1["cow"] - pc0["cow"],
+                pages_evicted=pc1["evicted"] - pc0["evicted"])
         return worked
 
     def _step_inner(self) -> int:
+        self._last_dec = []
         self._admit()
         stalled = self._ensure_pages()
         chunked = self._prefill_chunks()
@@ -1111,6 +1226,10 @@ class ServingEngine:
         self.stats.steps += 1
         self.stats.max_active = max(self.stats.max_active, len(dec))
         self.stats.active_slot_steps += len(dec)
+        self._last_dec = dec
+        # one clock reading covers every token this step emitted (they left
+        # the same launch) — the ITL anchor and done_t share it
+        now = self._clock() if self._obs else None
         for i in dec:
             req = self.slots[i]
             t = int(nxt[i])
@@ -1118,6 +1237,11 @@ class ServingEngine:
             self.pos[i] += 1
             self.last_tok[i] = t
             self.stats.decoded_tokens += 1
+            if self._obs:
+                tl = self.trace.timeline(req.uid)
+                if tl.last_emit_t is not None:
+                    self._h_itl.observe(now - tl.last_emit_t)
+                tl.last_emit_t = now
             hit_len = len(req.output) >= req.max_tokens
             hit_eos = t == self.eos
             # pos is the *next* write position; all S cache rows (0..S-1) are
@@ -1126,9 +1250,11 @@ class ServingEngine:
             # request unwritten and cost it one token of budget.)
             hit_cap = self.pos[i] >= self.S
             if hit_len or hit_eos or hit_cap:
-                req.done_t = time.perf_counter()
+                req.done_t = now if now is not None else self._clock()
                 req.finish_reason = "completed" if hit_eos else "length"
                 self.stats.completed += 1
+                if self._obs:
+                    self._note_finish(req)
                 if self.cache is not None:
                     # index the generated full pages too before the refs
                     # drop: identical continuations (multi-turn) now match
@@ -1180,9 +1306,9 @@ class ServingEngine:
                 st.rows, st.fixed_rows = img["kv"], img["fixed"]
                 st.corrupted = True
 
-    def _deadline_left(self, r: Request, now: float) -> str:
-        """Tightest remaining deadline of ``r`` as text: negative means
-        already past due (the expiry sweep will catch it next step); ``-``
+    def _deadline_left_s(self, r: Request, now: float) -> Optional[float]:
+        """Tightest remaining deadline of ``r`` in seconds: negative means
+        already past due (the expiry sweep will catch it next step); ``None``
         when the request carries no deadline at all."""
         rem = []
         age = now - r.arrival_t
@@ -1190,37 +1316,66 @@ class ServingEngine:
             rem.append(r.deadline_s - age)
         if r.ttft_deadline_s is not None and r.first_token_t is None:
             rem.append(r.ttft_deadline_s - age)
-        return f"{min(rem):.3f}s" if rem else "-"
+        return min(rem) if rem else None
 
-    def _pending_report(self) -> str:
-        """Every unfinished request — uid, phase (queued / swapped /
-        prefilling / decoding), progress, remaining deadline — plus pager
-        occupancy, for the stall / max_steps raises: the operator sees the
-        full stuck set, not just the queue head."""
-        lines = []
+    def metrics_snapshot(self) -> dict:
+        """The one structured view of engine state — latency histograms
+        (TTFT / ITL / e2e / queue wait / swap stall, with p50/p90/p99 under
+        the documented percentile rule), cumulative :class:`EngineStats`,
+        labeled counters/gauges, scheduler and pager counters, pager
+        occupancy, and the live pending set (uid, phase, progress, remaining
+        deadline).  ``launch/serve.py`` stat lines, the stall/max_steps
+        diagnostics (via :func:`repro.serving.metrics.format_pending`), and
+        ``benchmarks/run.py`` all read from here; nothing formats engine
+        internals on its own anymore."""
         now = self._clock()
+        pending = []
         for r in self.queue:
-            phase = ("swapped" if r.submit_seq in self._swapped else "queued")
-            lines.append(
-                f"  uid={r.uid} phase={phase} prompt={len(r.prompt)} "
-                f"out={len(r.output)}/{r.max_tokens} retries={r.retries} "
-                f"deadline={self._deadline_left(r, now)}")
+            pending.append({
+                "uid": r.uid,
+                "phase": ("swapped" if r.submit_seq in self._swapped
+                          else "queued"),
+                "slot": None, "pos": None, "prompt": len(r.prompt),
+                "out": len(r.output), "max_tokens": r.max_tokens,
+                "retries": r.retries,
+                "deadline_left_s": self._deadline_left_s(r, now)})
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
-            phase = ("prefilling" if self.pos[i] < self.pref_target[i]
-                     else "decoding")
-            lines.append(
-                f"  uid={r.uid} phase={phase} slot={i} pos={int(self.pos[i])} "
-                f"out={len(r.output)}/{r.max_tokens} retries={r.retries} "
-                f"deadline={self._deadline_left(r, now)}")
-        lines.append(
-            f"  pager: free={self.pager.free_pages}/"
-            f"{self.pager.num_pages - 1} "
-            f"held={int(self.pager.held().sum())} "
-            f"evictable={self.pager.evictable_pages()} "
-            f"swapped_images={len(self._swapped)}")
-        return "\n".join(lines)
+            pending.append({
+                "uid": r.uid,
+                "phase": ("prefilling" if self.pos[i] < self.pref_target[i]
+                          else "decoding"),
+                "slot": i, "pos": int(self.pos[i]), "prompt": len(r.prompt),
+                "out": len(r.output), "max_tokens": r.max_tokens,
+                "retries": r.retries,
+                "deadline_left_s": self._deadline_left_s(r, now)})
+        m = self.metrics.snapshot()
+        return {
+            "step": self._step_idx,
+            "engine": dataclasses.asdict(self.stats),
+            "latency": {
+                name: self.metrics.histogram(name).summary()
+                for name in ("ttft_s", "itl_s", "e2e_s", "queue_wait_s",
+                             "swap_stall_s")},
+            "counters": m["counters"],
+            "gauges": m["gauges"],
+            "scheduler": dict(self.sched.counts),
+            "pager": {
+                "free_pages": self.pager.free_pages,
+                "total_pages": self.pager.num_pages - 1,
+                "held": int(self.pager.held().sum()),
+                "evictable": self.pager.evictable_pages(),
+                "swapped_images": len(self._swapped),
+                "counts": dict(self.pager.counts),
+            },
+            "pending": pending,
+        }
+
+    def _pending_report(self) -> str:
+        """Stall/max_steps diagnostic text — a rendering of
+        :meth:`metrics_snapshot`, not a second formatting path."""
+        return format_pending(self.metrics_snapshot())
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         """Step until queue and slots are empty.  ``max_steps`` bounds *all*

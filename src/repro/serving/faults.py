@@ -114,6 +114,10 @@ class FaultPlan:
 
     ``injected`` counts fires per site; ``log`` records
     ``(step, site, probe_index)`` per fire for diffable chaos reports.
+    ``sink``, when set (the engine installs its observability callback),
+    receives every fired site name the instant it fires — that is how each
+    fault probe emits a labeled metrics counter event without this module
+    importing the metrics core.
     """
 
     def __init__(self, specs: Sequence[FaultSpec], seed: int = 0):
@@ -126,6 +130,7 @@ class FaultPlan:
         self.injected: Dict[str, int] = {s: 0 for s in SITES}
         self.log: List[tuple] = []
         self.pressure_hits = 0           # probes that saw an active window
+        self.sink = None                 # callable(site) on fire (metrics)
 
     # ------------------------------------------------------------- clock ---
     def begin_step(self, step_index: int) -> None:
@@ -161,6 +166,8 @@ class FaultPlan:
                 self._fires_left[i] = left - 1
             self.injected[site] += 1
             self.log.append((self._step, site, opi))
+            if self.sink is not None:
+                self.sink(site)
             return True
         return False
 

@@ -109,6 +109,12 @@ class PagePool:
         self._cached: set = set()                   # prefix-cache resident
         self._evictor = None                        # PrefixCache (or None)
         self.faults = None                          # FaultPlan (or None)
+        # cumulative page-event counters for observability: the engine's
+        # step journal diffs these across a step to attribute page churn
+        # (grown/COW'd/attached/freed/evicted) to the step that caused it.
+        # Pure host-side ints — recording never touches device state.
+        self.counts: Dict[str, int] = {
+            "grown": 0, "cow": 0, "attached": 0, "freed": 0, "evicted": 0}
 
     # ------------------------------------------------------------- queries --
     @property
@@ -185,6 +191,7 @@ class PagePool:
             raise RuntimeError(f"page {page} is not an evictable cached page")
         self._cached.discard(page)
         self._free.append(page)
+        self.counts["evicted"] += 1
 
     def _take_free(self, n: int) -> List[int]:
         """Pop ``n`` free pages, evicting LRU cached pages as needed."""
@@ -205,6 +212,7 @@ class PagePool:
                 self._evictor.on_unreferenced(page)
             else:
                 self._free.append(page)
+                self.counts["freed"] += 1
 
     # ------------------------------------------------------- alloc / free ---
     def alloc(self, slot: int, n: int) -> List[int]:
@@ -240,6 +248,7 @@ class PagePool:
             self._ref[p] = 1
         sp[slot].extend(pages)
         tab[slot, owned : owned + n] = pages
+        self.counts["grown"] += n
         return pages
 
     def attach(self, slot: int, pages: List[int], group: str = "kv") -> None:
@@ -266,6 +275,7 @@ class PagePool:
             self._ref[p] += 1
         sp[slot].extend(pages)
         tab[slot, owned : owned + len(pages)] = pages
+        self.counts["attached"] += len(pages)
 
     def cow(self, slot: int, logical_idx: int, *,
             hold_src: bool = False) -> Tuple[int, int]:
@@ -284,6 +294,7 @@ class PagePool:
         old = self._slot_pages[slot][logical_idx]
         new = self._take_free(1)[0]
         self._ref[new] = 1
+        self.counts["cow"] += 1
         self._slot_pages[slot][logical_idx] = new
         self._table[slot, logical_idx] = new
         if hold_src:

@@ -120,6 +120,12 @@ class Scheduler:
         # the engine reads this to count a retry and to distinguish a
         # fault-induced idle step from a genuine admission stall
         self.last_plan_aborted = False
+        # cumulative planning counters, surfaced by the engine's
+        # metrics_snapshot(): how many plan passes ran, requests admitted,
+        # chunk rounds launched and chunk tokens scheduled, and plans
+        # aborted mid-admission by an injected fault
+        self.counts = {"plans": 0, "admitted": 0, "chunk_rounds": 0,
+                       "chunk_tokens": 0, "aborted_plans": 0}
 
     def bucket_len(self, prompt_len: int) -> int:
         b = self.page_size
@@ -190,6 +196,7 @@ class Scheduler:
         buckets: dict = {}
         spent = 0
         self.last_plan_aborted = False
+        self.counts["plans"] += 1
         while queue and slots:
             req = queue[0]
             t = len(req.prompt)
@@ -247,6 +254,7 @@ class Scheduler:
                 pool.free_slot(slot)
                 queue.appendleft(req)
                 self.last_plan_aborted = True
+                self.counts["aborted_plans"] += 1
                 break
             if self.reservation == "lazy":
                 reserve += 1                # growth headroom for the new slot
@@ -259,6 +267,7 @@ class Scheduler:
             bkt.reqs.append(req)
             bkt.slots.append(slot)
             bkt.needs.append(fresh)
+            self.counts["admitted"] += 1
             bkt.prefix_lens.append(prefix)
             bkt.shared.append(shared)
             bkt.cow.append(cow_pair)
@@ -309,6 +318,9 @@ class Scheduler:
             bkt.starts.append(written)
             bkt.lens.append(c)
             bkt.final.append(written + c == target)
+            self.counts["chunk_tokens"] += c
             if left is not None:
                 left -= c
+        if buckets:
+            self.counts["chunk_rounds"] += 1
         return list(buckets.values())
